@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: each module exposes run() -> list of
+(name, us_per_call, derived) rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def fmt_rows(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{us:.1f},{d}" for n, us, d in rows)

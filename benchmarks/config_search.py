@@ -1,0 +1,79 @@
+"""E2/E3 — paper Figs. 3, 5, 6: Camel vs. grid search over 49 rounds.
+
+Per model: energy / latency / EDP / cost reductions vs. grid, the regret
+ratio (grid / camel), optimum-hit rate and arms-explored count, averaged
+over seeds.  Paper reference points: cost -46.4%/-45.9%, EDP -49.5%/-35.8%,
+E -27.1%/-34.4%, regret 3.8x/2.3x (llama/qwen).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core import arms, baselines, controller, cost, priors
+from repro.serving import energy, simulator
+
+N_SEEDS = 8
+ROUNDS = 49
+
+
+def _one_model(work):
+    board = energy.JETSON_AGX_ORIN
+    space = arms.paper_arm_space()
+    cm = cost.CostModel(alpha=0.5)
+    env0 = simulator.LandscapeEnv(board, work, noise=0.03)
+    e_ref, l_ref = env0.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
+                                                     cm)
+    probe_tb = work.batch_time(board, board.n_levels - 1, 4)
+    mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, 4)
+
+    agg = {k: [] for k in ("cost", "edp", "energy", "latency", "regret",
+                           "hit", "explored")}
+    for seed in range(N_SEEDS):
+        c1 = controller.Controller(
+            space, baselines.make_policy("camel", prior_mu=mu0,
+                                         prior_sigma=sig0),
+            cm, optimal_cost=opt_cost, seed=seed)
+        r1c = c1.run(simulator.LandscapeEnv(board, work, noise=0.03,
+                                            seed=seed), ROUNDS)
+        r1 = r1c.summary()
+        c2 = controller.Controller(space, baselines.make_policy("grid"),
+                                   cm, optimal_cost=opt_cost, seed=seed)
+        r2 = c2.run(simulator.LandscapeEnv(board, work, noise=0.03,
+                                           seed=seed), ROUNDS).summary()
+        agg["cost"].append(1 - r1["cost"] / r2["cost"])
+        agg["edp"].append(1 - r1["edp"] / r2["edp"])
+        agg["energy"].append(1 - r1["energy_per_req"]
+                             / r2["energy_per_req"])
+        agg["latency"].append(1 - r1["latency_per_req"]
+                              / r2["latency_per_req"])
+        agg["regret"].append(r2["cum_regret"]
+                             / max(r1["cum_regret"], 1e-9))
+        agg["hit"].append(1.0 if r1["best_arm"] == opt_arm else 0.0)
+        agg["explored"].append(float((r1c.arm_counts(space.n_arms)
+                                      > 0).sum()))
+    return {k: float(np.mean(v)) for k, v in agg.items()}
+
+
+def run() -> list:
+    rows: list[Row] = []
+    paper = {"llama3.2-1b": (0.4643, 0.4945, 0.2713, 3.8),
+             "qwen2.5-3b": (0.4585, 0.3575, 0.3443, 2.3)}
+    for name, work in energy.ORIN_WORKLOADS.items():
+        out, us = timed(_one_model, work)
+        pc, pe, pen, pr = paper[name]
+        rows.append((f"search_{name}_cost_reduction_vs_grid", us,
+                     f"{out['cost']:.3f} (paper {pc})"))
+        rows.append((f"search_{name}_edp_reduction_vs_grid", 0.0,
+                     f"{out['edp']:.3f} (paper {pe})"))
+        rows.append((f"search_{name}_energy_reduction_vs_grid", 0.0,
+                     f"{out['energy']:.3f} (paper {pen})"))
+        rows.append((f"search_{name}_regret_ratio_grid_over_camel", 0.0,
+                     f"{out['regret']:.2f}x (paper {pr}x)"))
+        rows.append((f"search_{name}_hit_rate_and_explored", 0.0,
+                     f"hit={out['hit']:.2f} explored={out['explored']:.0f}"
+                     "/49 (grid explores 49)"))
+    return rows

@@ -1,0 +1,76 @@
+"""E8 — kernel micro-benchmarks: interpret-mode correctness vs. oracle +
+CPU reference timings (TPU wall-clock is out of scope in this container;
+the dry-run roofline carries the perf analysis)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_ref)
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.moe_gemm.ops import grouped_gemm, moe_gemm_ref
+from repro.kernels.rglru.ops import rglru, rglru_scan_ref
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_ref
+from repro.kernels.rwkv6.ops import wkv6, wkv6_sequential
+
+
+def run() -> list:
+    rows: list[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    out, us = timed(lambda: np.asarray(flash_attention(
+        q, k, v, block_q=64, block_kv=64, interpret=True)))
+    err = float(np.max(np.abs(out - np.asarray(attention_ref(q, k, v)))))
+    rows.append(("kernel_flash_attention_256", us, f"max_err={err:.2e}"))
+
+    qd = jax.random.normal(ks[3], (4, 8, 64), jnp.float32)
+    outd, us = timed(lambda: np.asarray(decode_attention(
+        qd, k.repeat(4 // 1, 0)[:4], v.repeat(4, 0)[:4],
+        jnp.asarray(200), block_kv=64, interpret=True)))
+    refd = decode_attention_ref(qd, k.repeat(4, 0)[:4], v.repeat(4, 0)[:4],
+                                jnp.asarray(200))
+    err = float(np.max(np.abs(outd - np.asarray(refd))))
+    rows.append(("kernel_decode_attention_s256", us, f"max_err={err:.2e}"))
+
+    r = 0.5 * jax.random.normal(ks[4], (1, 64, 2, 32), jnp.float32)
+    kk = 0.5 * jax.random.normal(ks[5], (1, 64, 2, 32), jnp.float32)
+    vv = jax.random.normal(ks[6], (1, 64, 2, 32), jnp.float32)
+    lw = jnp.clip(-jnp.exp(jax.random.normal(ks[7], (1, 64, 2, 32)) - 2),
+                  -4, -1e-6)
+    u = jnp.zeros((2, 32))
+    st0 = jnp.zeros((1, 2, 32, 32))
+    (y, _), us = timed(lambda: jax.tree.map(np.asarray, wkv6(
+        r, kk, vv, lw, u, st0, chunk=16, interpret=True)))
+    y0, _ = wkv6_sequential(r, kk, vv, lw, u, st0)
+    rows.append(("kernel_wkv6_chunked_s64", us,
+                 f"max_err={float(np.max(np.abs(y - np.asarray(y0)))):.2e}"))
+
+    la = -jnp.exp(jax.random.normal(ks[0], (1, 64, 256)) - 1.5)
+    bb = jax.random.normal(ks[1], (1, 64, 256))
+    (h, _), us = timed(lambda: jax.tree.map(np.asarray, rglru(
+        la, bb, chunk=16, block_w=128, interpret=True)))
+    h0, _ = rglru_scan_ref(la, bb)
+    rows.append(("kernel_rglru_s64_w256", us,
+                 f"max_err={float(np.max(np.abs(h - np.asarray(h0)))):.2e}"))
+
+    x = jax.random.normal(ks[2], (512, 256), jnp.float32)
+    sc = 0.1 * jax.random.normal(ks[3], (256,))
+    o, us = timed(lambda: np.asarray(rmsnorm(x, sc, interpret=True)))
+    err = float(np.max(np.abs(o - np.asarray(rmsnorm_ref(x, sc)))))
+    rows.append(("kernel_rmsnorm_512x256", us, f"max_err={err:.2e}"))
+
+    xe = jax.random.normal(ks[4], (4, 64, 64), jnp.float32)
+    we = jax.random.normal(ks[5], (4, 64, 64), jnp.float32)
+    o, us = timed(lambda: np.asarray(grouped_gemm(
+        xe, we, interpret=True, block_c=32, block_f=32, block_k=32)))
+    err = float(np.max(np.abs(o - np.asarray(moe_gemm_ref(xe, we)))))
+    rows.append(("kernel_moe_gemm_4x64", us, f"max_err={err:.2e}"))
+    return rows

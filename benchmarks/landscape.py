@@ -1,0 +1,38 @@
+"""E1 — paper Fig. 1: the 49-configuration (frequency x batch) landscape.
+
+Reports the optimum location, the cost at the paper's labeled corner
+configs, and the normalized-cost extremes, per edge model.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.arms import PAPER_BATCH_SIZES
+from repro.serving import energy
+
+
+def _landscape(work):
+    board = energy.JETSON_AGX_ORIN
+    E, L = energy.landscape(board, work, PAPER_BATCH_SIZES, 1.0, 2500)
+    c = 0.5 * E / E[-1, -1] + 0.5 * L / L[-1, -1]
+    return board, E, L, c
+
+
+def run() -> list:
+    rows: list[Row] = []
+    for name, work in energy.ORIN_WORKLOADS.items():
+        (board, E, L, c), us = timed(_landscape, work)
+        i, j = np.unravel_index(np.argmin(c), c.shape)
+        opt = f"({board.freqs_mhz[i]}MHz b={PAPER_BATCH_SIZES[j]})"
+        rows.append((f"landscape_{name}_optimum", us,
+                     f"opt={opt} cost={c[i, j]:.4f}"))
+        corners = {
+            "maxf_minb": (6, 0), "maxf_maxb": (6, 6), "minf_maxb": (0, 6),
+            "minf_minb": (0, 0)}
+        for cn, (ci, cj) in corners.items():
+            rows.append((f"landscape_{name}_{cn}", 0.0,
+                         f"cost={c[ci, cj]:.4f} E={E[ci, cj]:.2f}J "
+                         f"L={L[ci, cj]:.2f}s"))
+    return rows

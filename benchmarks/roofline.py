@@ -1,0 +1,51 @@
+"""E7 — roofline table from the multi-pod dry-run records
+(results/dryrun/*.json; see launch/dryrun.py and EXPERIMENTS.md SSRoofline).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(mesh: str = "single", tag: str = "") -> list:
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run() -> list:
+    rows: list[Row] = []
+    recs = load("single")
+    if not recs:
+        rows.append(("roofline_missing", 0.0,
+                     "run: python -m repro.launch.dryrun --all --mesh both"))
+        return rows
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    rows.append(("roofline_cells", 0.0,
+                 f"ok={len(ok)} skipped={len(skipped)} (documented) "
+                 f"errors={len(recs) - len(ok) - len(skipped)}"))
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        ur = rf["useful_flops_ratio"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}", 0.0,
+            f"dom={rf['dominant']} comp={rf['compute_s']:.2e}s "
+            f"mem={rf['memory_s']:.2e}s coll={rf['collective_s']:.2e}s "
+            f"useful={ur if ur is None else round(ur, 2)}"))
+    # multi-pod pass/fail summary
+    multi = load("multi")
+    ok_m = sum(1 for r in multi if r["status"] == "ok")
+    rows.append(("roofline_multipod_compiles", 0.0,
+                 f"{ok_m} cells ok on 2x16x16 (512 chips)"))
+    return rows

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per module:
+
+    E1 landscape      Fig. 1   49-config (f, b) landscape + optimum
+    E2/E3 search      Figs.3/5/6  Camel vs grid (cost/EDP/E, regret, arms)
+    E4 validation     Fig. 4   optimal vs default corners, 2500 requests
+    E5 sensitivity    Figs.7-10  alpha / interval / token-length / split
+    E6 tpu_serving    DESIGN SS3  v5e adaptation landscapes + search
+    E7 roofline       EXPERIMENTS SSRoofline  dry-run derived terms
+    E8 kernels        kernel-vs-oracle checks + reference timings
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablations, config_search, kernels, landscape,
+                            roofline, sensitivity, tpu_serving, validation)
+
+    modules = [
+        ("E1_landscape", landscape),
+        ("E2_E3_config_search", config_search),
+        ("E4_validation", validation),
+        ("E5_sensitivity", sensitivity),
+        ("E6_tpu_serving", tpu_serving),
+        ("E7_roofline", roofline),
+        ("E8_kernels", kernels),
+        ("E9_ablations", ablations),
+    ]
+    only = set(sys.argv[1:])
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        if only and not any(name.startswith(o) or o in name for o in only):
+            continue
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

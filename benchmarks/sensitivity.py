@@ -1,0 +1,64 @@
+"""E5 — paper Figs. 7-10: alpha / arrival-interval / token-length
+sensitivity + the waiting-vs-batching latency split."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, timed
+from repro.core.arms import PAPER_BATCH_SIZES
+from repro.serving import energy
+
+BOARD = energy.JETSON_AGX_ORIN
+LLAMA = energy.LLAMA32_1B_ORIN
+
+
+def _opt_at_alpha(alpha):
+    E, L = energy.landscape(BOARD, LLAMA, PAPER_BATCH_SIZES, 1.0, 2500)
+    c = alpha * E / E[-1, -1] + (1 - alpha) * L / L[-1, -1]
+    i, j = np.unravel_index(np.argmin(c), c.shape)
+    return BOARD.freqs_mhz[i], PAPER_BATCH_SIZES[j]
+
+
+def run() -> list:
+    rows: list[Row] = []
+
+    # Fig. 7: alpha sweep — f down / b up as alpha grows
+    path = []
+    for alpha in (0.1, 0.3, 0.5, 0.7, 0.9):
+        (f, b), us = timed(_opt_at_alpha, alpha)
+        path.append(f"a={alpha}:({f:.0f},{b})")
+    rows.append(("sensitivity_alpha_optimum_path", us,
+                 " ".join(path) + " (paper: f down, b up)"))
+
+    # Fig. 9: arrival interval — L up, E flat
+    ls, es = [], []
+    for interval in (0.5, 1.0, 2.0, 3.0):
+        E, L = energy.landscape(BOARD, LLAMA, PAPER_BATCH_SIZES,
+                                arrival_rate=1.0 / interval)
+        es.append(E[5, 4])
+        ls.append(L[5, 4])
+    rows.append(("sensitivity_interval_latency", 0.0,
+                 f"L={['%.1f' % x for x in ls]} (monotone up) "
+                 f"E ptp={np.ptp(es):.2e} (flat)"))
+
+    # Fig. 8: token length (work scale) — E and L linear
+    es, ls = [], []
+    for k in (0.5, 1.0, 1.5, 2.0):
+        es.append(energy.energy_per_request(BOARD, LLAMA, 6, 28,
+                                            work_scale=k))
+        ls.append(energy.mean_latency(BOARD, LLAMA, 6, 28, 1.0, 2500,
+                                      work_scale=k))
+    r2_e = np.corrcoef([0.5, 1.0, 1.5, 2.0], es)[0, 1] ** 2
+    rows.append(("sensitivity_token_length_linearity", 0.0,
+                 f"E linear R2={r2_e:.4f} L spread "
+                 f"{ls[-1] - ls[0]:.2f}s (paper: linear)"))
+
+    # Fig. 10: waiting vs batching split at four labeled configs
+    for f, b in ((930.75, 28), (306.0, 28), (930.75, 4), (816.0, 20)):
+        lvl = BOARD.level_of(f)
+        tb = LLAMA.batch_time(BOARD, lvl, b)
+        wait = (b - 1) / 2.0
+        rows.append((f"sensitivity_split_{f:.0f}MHz_b{b}", 0.0,
+                     f"wait={wait:.1f}s batch={tb:.2f}s"))
+    return rows

@@ -1,0 +1,36 @@
+"""E4 — paper Fig. 4: the found optimum vs. the three default corners,
+event-driven serving of 2500 requests (alpaca-scale).
+
+Paper reference: EDP reduced 29.94%/12.46% vs (max f, max b) and
+51.35%/46.34% vs (min f, max b) for llama/qwen.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.launch.serve import validate_mode
+
+N_REQUESTS = 2500
+
+
+def run() -> list:
+    rows: list[Row] = []
+    paper_mm = {"llama3.2-1b": 0.2994, "qwen2.5-3b": 0.1246}
+    for model in ("llama3.2-1b", "qwen2.5-3b"):
+        out, us = timed(validate_mode, model, N_REQUESTS, 0.5, 0)
+        opt = out["camel_optimal"]
+        rows.append((f"validate_{model}_optimal_config", us,
+                     f"{opt['knobs']} E={opt['energy_per_req']:.2f}J "
+                     f"L={opt['latency_per_req']:.2f}s"))
+        rows.append((f"validate_{model}_edp_vs_maxf_maxb", 0.0,
+                     f"-{opt['edp_vs_maxf_maxb']*100:.1f}% "
+                     f"(paper -{paper_mm[model]*100:.1f}%)"))
+        red_nm = 1 - opt["edp"] / out["minf_maxb"]["edp"]
+        rows.append((f"validate_{model}_edp_vs_minf_maxb", 0.0,
+                     f"-{red_nm*100:.1f}% (paper -51.4/-46.3%)"))
+        red_mn = 1 - opt["edp"] / out["maxf_minb"]["edp"]
+        rows.append((f"validate_{model}_edp_vs_maxf_minb", 0.0,
+                     f"-{red_mn*100:.1f}%"))
+        rows.append((f"validate_{model}_p99_latency", 0.0,
+                     f"{opt['p99_latency']:.2f}s"))
+    return rows

@@ -1,0 +1,25 @@
+"""Camel driving the REAL JAX inference engine (reduced model on CPU):
+each bandit pull actually serves a batch of prompts through prefill +
+greedy decode; energy comes from the board power model at the arm's
+frequency level.
+
+    PYTHONPATH=src python examples/engine_camel.py --rounds 12
+"""
+
+import argparse
+import json
+
+from repro.launch.serve import engine_mode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--rounds", type=int, default=12)
+    args = ap.parse_args()
+    out = engine_mode(args.arch, args.rounds, alpha=0.5, seed=0)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: Camel's Thompson-sampling configuration search on the
+calibrated Jetson AGX Orin + Llama3.2-1B landscape (paper Results 1).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import arms, baselines, controller, cost, priors
+from repro.serving import energy, simulator
+
+
+def main() -> None:
+    board = energy.JETSON_AGX_ORIN
+    work = energy.ORIN_WORKLOADS["llama3.2-1b"]
+    space = arms.paper_arm_space()                # 7 freqs x 7 batches
+    env = simulator.LandscapeEnv(board, work, noise=0.03, seed=0)
+
+    # Cost normalization at (max f, max b), as in the paper.
+    cm = cost.CostModel(alpha=0.5)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected,
+                                                     cm)
+    print(f"true optimum: {space.values(opt_arm)} (cost {opt_cost:.4f})")
+
+    # Structured prior: coarse physics + one probe batch (DESIGN.md SS1).
+    probe_tb = work.batch_time(board, board.n_levels - 1, 4)
+    mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, probe_batch=4)
+    camel = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+
+    ctrl = controller.Controller(space, camel, cm, optimal_cost=opt_cost,
+                                 seed=0)
+    result = ctrl.run(env, n_rounds=49)
+    s = result.summary()
+    print(f"after 49 rounds: best={s['best_knobs']} "
+          f"avg_cost={s['cost']:.3f} cum_regret={s['cum_regret']:.2f}")
+    counts = result.arm_counts(space.n_arms)
+    print(f"explored {int((counts > 0).sum())}/49 arms "
+          f"(grid search explores all 49)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The TPU v5e adaptation (DESIGN.md SS3): Camel searching the
+(perf-state x batch) grid on a roofline-derived decode landscape.
+
+Structural result: decode is HBM-bound, so the optimum sits at a LOW perf
+state — the opposite of the compute-bound Jetson — and Camel discovers it
+online.
+
+    PYTHONPATH=src python examples/tpu_serving.py --arch qwen2-1.5b
+"""
+
+import argparse
+import json
+
+from repro.launch.serve import tpu_mode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--rounds", type=int, default=60)
+    args = ap.parse_args()
+    out = tpu_mode(args.arch, args.rounds, alpha=0.5, seed=0)
+    print(json.dumps(out, indent=2, default=str))
+    ps = out["optimal_knobs"]["perf_state"]
+    print(f"\noptimal perf state {ps} (<= 0.73 expected: HBM-bound decode)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Train a reduced (~smoke) model for a few hundred steps with the full
+substrate: sharded step, checkpointing + resume, straggler watchdog.
+
+    PYTHONPATH=src python examples/train_smoke.py --arch smollm-360m
+"""
+
+import argparse
+import tempfile
+
+from repro.launch.train import run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        out = run_training(args.arch, smoke=True, steps=args.steps,
+                           global_batch=8, seq_len=64, ckpt_dir=ckpt,
+                           ckpt_every=50, log_every=20)
+    print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f} over "
+          f"{out['steps_run']} steps")
+    assert out["final_loss"] < out["first_loss"]
+
+
+if __name__ == "__main__":
+    main()

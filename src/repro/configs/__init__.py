@@ -1,0 +1,61 @@
+"""Architecture configs.
+
+`get(name)` returns the full assigned config; `get_smoke(name)` returns the
+reduced same-family config for CPU smoke tests.  `ARCHS` lists the ten
+assigned architectures; `EDGE_MODELS` the paper's two edge models.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+ARCHS: List[str] = [
+    "rwkv6_3b",
+    "phi3_vision_4p2b",
+    "smollm_360m",
+    "qwen2_1p5b",
+    "gemma2_27b",
+    "starcoder2_7b",
+    "seamless_m4t_large_v2",
+    "mixtral_8x22b",
+    "olmoe_1b_7b",
+    "recurrentgemma_9b",
+]
+
+EDGE_MODELS: List[str] = ["llama32_1b", "qwen25_3b"]
+
+ALIASES: Dict[str, str] = {
+    "rwkv6-3b": "rwkv6_3b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "smollm-360m": "smollm_360m",
+    "qwen2-1.5b": "qwen2_1p5b",
+    "gemma2-27b": "gemma2_27b",
+    "starcoder2-7b": "starcoder2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "llama3.2-1b": "llama32_1b",
+    "qwen2.5-3b": "qwen25_3b",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    """Full (assigned-spec) config."""
+    return _module(name).config()
+
+
+def get_smoke(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(name).smoke_config()
+
+
+def input_specs(name: str, shape: str):
+    """ShapeDtypeStruct stand-ins for the dry-run; see each config module."""
+    return _module(name).input_specs(shape)

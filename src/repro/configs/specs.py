@@ -1,0 +1,96 @@
+"""Dry-run input specifications (ShapeDtypeStruct stand-ins, no allocation).
+
+Each assigned architecture pairs with four shapes:
+    train_4k     seq 4096  x global_batch 256   -> train_step
+    prefill_32k  seq 32768 x global_batch 32    -> prefill_step
+    decode_32k   KV 32768  x global_batch 128   -> serve_step (1 new token)
+    long_500k    KV 524288 x global_batch 1     -> serve_step; sub-quadratic
+                                                   archs only (DESIGN.md SS4)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+SHAPES: Dict[str, tuple] = {
+    "train_4k": (4096, 256),
+    "prefill_32k": (32768, 32),
+    "decode_32k": (32768, 128),
+    "long_500k": (524288, 1),
+}
+
+#: archs that run the 500k decode cell (attention-free / windowed / hybrid)
+LONG_OK = {"rwkv6-3b", "recurrentgemma-9b", "gemma2-27b", "mixtral-8x22b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class DryRunSpec:
+    kind: str                      # "train" | "prefill" | "decode"
+    inputs: Dict[str, Any]         # step-fn inputs as ShapeDtypeStructs
+    batch: int
+    seq_len: int
+    note: str = ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lm_input_specs(cfg, shape: str, *, prefix_len: int = 0,
+                   dtype=jnp.bfloat16) -> Optional[DryRunSpec]:
+    """Decoder-only LM families (transformer / rwkv6 / rglru)."""
+    if shape not in SHAPES:
+        raise KeyError(shape)
+    seq, gb = SHAPES[shape]
+    if shape == "long_500k" and cfg.name not in LONG_OK:
+        return None
+
+    if shape == "train_4k":
+        inputs = {"tokens": _sds((gb, seq), jnp.int32),
+                  "labels": _sds((gb, seq), jnp.int32)}
+        if prefix_len:
+            inputs["prefix_embeddings"] = _sds((gb, prefix_len, cfg.d_model),
+                                               dtype)
+        return DryRunSpec("train", inputs, gb, seq)
+
+    if shape == "prefill_32k":
+        inputs = {"tokens": _sds((gb, seq), jnp.int32)}
+        if prefix_len:
+            inputs["prefix_embeddings"] = _sds((gb, prefix_len, cfg.d_model),
+                                               dtype)
+        return DryRunSpec("prefill", inputs, gb, seq)
+
+    # decode shapes: one token against a seq-long cache
+    inputs = {"token": _sds((gb,), jnp.int32),
+              "pos": _sds((), jnp.int32)}
+    return DryRunSpec("decode", inputs, gb, seq)
+
+
+def encdec_input_specs(cfg, shape: str, *, dtype=jnp.bfloat16,
+                       ) -> Optional[DryRunSpec]:
+    """seamless: encoder memory capped at cfg.max_source_len frames; the
+    sequence axis of the decode shapes applies to the decoder target."""
+    seq, gb = SHAPES[shape]
+    if shape == "long_500k":
+        return None  # full-attention enc-dec: skipped (DESIGN.md SS4)
+    src = min(seq, cfg.max_source_len)
+
+    if shape == "train_4k":
+        return DryRunSpec("train", {
+            "speech_embeddings": _sds((gb, src, cfg.d_model), dtype),
+            "tokens": _sds((gb, seq), jnp.int32),
+            "labels": _sds((gb, seq), jnp.int32)}, gb, seq)
+
+    if shape == "prefill_32k":
+        return DryRunSpec("prefill", {
+            "speech_embeddings": _sds((gb, src, cfg.d_model), dtype),
+            "tokens": _sds((gb, seq), jnp.int32)}, gb, seq,
+            note=f"encoder memory capped at {src} frames")
+
+    return DryRunSpec("decode", {
+        "token": _sds((gb,), jnp.int32),
+        "pos": _sds((), jnp.int32)}, gb, seq)

@@ -1,0 +1,5 @@
+"""Camel core: Thompson-sampling configuration search (the paper's
+contribution), arm spaces, cost metrics, baselines and the online
+controller."""
+
+from repro.core import arms, bandit, baselines, controller, cost, priors  # noqa: F401

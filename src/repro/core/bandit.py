@@ -1,0 +1,292 @@
+"""Camel's Thompson-sampling bandit (paper Algorithm 1, Eqs. 13-20).
+
+The paper models the *cost* of pulling arm i as x ~ N(theta_i, sigma1_i^2)
+with a conjugate Gaussian prior theta_i ~ N(mu_i, sigma2_i^2).  After n_i
+observations with sample mean xbar_i, the posterior over theta_i is again
+Gaussian with (Eqs. 19-20):
+
+    mu~     = (n*xi1*xbar + mu0*xi2) / (n*xi1 + xi2)
+    sigma2~ = 1 / (n*xi1 + xi2)                 xi1 = 1/sigma1^2, xi2 = 1/sigma2_0^2
+
+sigma1 (the observation noise) is *estimated online* from the arm's observed
+cost variance (paper: "sigma1 = var(COST_arm)"), floored to keep the update
+well-defined before two observations exist.
+
+Per round (MAIN):  EVAL samples theta_i ~ N(mu_i, sigma2_i^2) for every arm,
+the controller pulls argmin, observes a cost, and UPDATE recomputes the
+posterior of that arm from its full observation history (the paper's batch
+form, not the streaming one-sample form — both are provided).
+
+This module is a pure-functional JAX implementation: state is a pytree of
+arrays over the arm axis so that `sample`/`update` jit and vmap cleanly, and
+the controller loop can run either in Python (serving) or under lax.scan
+(simulation / tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Numerical floors: before an arm has >=2 observations its sample variance is
+# 0/undefined; the paper implicitly relies on a prior-dominated update there.
+_MIN_OBS_STD = 1e-3
+_MIN_PRIOR_STD = 1e-6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TSState:
+    """Posterior state for Gaussian-Gaussian Thompson sampling over n arms.
+
+    All leaves have leading dim n_arms.
+    """
+
+    mu: Array          # posterior mean of theta_i          (f32[n])
+    sigma2: Array      # posterior *std* of theta_i         (f32[n])
+    prior_mu: Array    # prior mean  mu_0                   (f32[n])
+    prior_sigma2: Array  # prior std  sigma2_0              (f32[n])
+    count: Array       # n_i observations                   (i32[n])
+    sum_x: Array       # sum of observed costs              (f32[n])
+    sum_x2: Array      # sum of squared observed costs      (f32[n])
+
+    @property
+    def n_arms(self) -> int:
+        return self.mu.shape[0]
+
+    def mean_cost(self) -> Array:
+        """Empirical mean cost per arm (NaN-free: prior mean where unpulled)."""
+        safe = jnp.maximum(self.count, 1)
+        emp = self.sum_x / safe
+        return jnp.where(self.count > 0, emp, self.prior_mu)
+
+    def obs_std(self) -> Array:
+        """sigma1 estimate per arm = std of observed costs (paper UPDATE:17)."""
+        safe = jnp.maximum(self.count, 1)
+        mean = self.sum_x / safe
+        var = self.sum_x2 / safe - mean * mean
+        var = jnp.maximum(var, 0.0)
+        std = jnp.sqrt(var)
+        # Undefined before 2 observations -> floor; also floor tiny variances
+        # (deterministic simulators can produce identical costs).
+        return jnp.where(self.count >= 2, jnp.maximum(std, _MIN_OBS_STD),
+                         jnp.maximum(self.prior_sigma2, _MIN_OBS_STD))
+
+
+def init_state(
+    n_arms: int,
+    prior_mu: float | Array = 1.0,
+    prior_sigma: float | Array = 1.0,
+) -> TSState:
+    """Fresh posterior = prior.  Default prior N(1, 1) matches the paper's
+    normalized-cost scale (cost at (max f, max b) is normalized to 1)."""
+    pm = jnp.broadcast_to(jnp.asarray(prior_mu, jnp.float32), (n_arms,))
+    ps = jnp.broadcast_to(jnp.asarray(prior_sigma, jnp.float32), (n_arms,))
+    ps = jnp.maximum(ps, _MIN_PRIOR_STD)
+    zeros = jnp.zeros((n_arms,), jnp.float32)
+    return TSState(
+        mu=pm,
+        sigma2=ps,
+        prior_mu=pm,
+        prior_sigma2=ps,
+        count=jnp.zeros((n_arms,), jnp.int32),
+        sum_x=zeros,
+        sum_x2=zeros,
+    )
+
+
+# ---------------------------------------------------------------------------
+# EVAL (Alg. 1 lines 7-14): sample theta_i ~ N(mu_i, sigma2_i^2) for all arms
+# ---------------------------------------------------------------------------
+
+def sample_thetas(state: TSState, key: Array) -> Array:
+    """Draw one theta per arm from its posterior."""
+    eps = jax.random.normal(key, (state.n_arms,), dtype=jnp.float32)
+    return state.mu + state.sigma2 * eps
+
+
+def select_arm(state: TSState, key: Array,
+               active_mask: Optional[Array] = None) -> Array:
+    """argmin over sampled thetas (cost-minimizing TS).  `active_mask` lets a
+    controller disable arms (e.g. batch sizes above a latency SLO)."""
+    thetas = sample_thetas(state, key)
+    if active_mask is not None:
+        thetas = jnp.where(active_mask, thetas, jnp.inf)
+    return jnp.argmin(thetas)
+
+
+# ---------------------------------------------------------------------------
+# UPDATE (Alg. 1 lines 15-18 + Eqs. 19-20)
+# ---------------------------------------------------------------------------
+
+def update(state: TSState, arm: Array, cost: Array) -> TSState:
+    """Record `cost` for `arm` and recompute that arm's posterior from its
+    full history against the *original* prior (the paper's batch update).
+
+    Fully vectorized across arms via masking so it jits with traced `arm`.
+    """
+    arm = jnp.asarray(arm)
+    cost = jnp.asarray(cost, jnp.float32)
+    onehot = jnp.arange(state.n_arms) == arm
+
+    count = state.count + onehot.astype(jnp.int32)
+    sum_x = state.sum_x + onehot * cost
+    sum_x2 = state.sum_x2 + onehot * cost * cost
+
+    tmp = dataclasses.replace(state, count=count, sum_x=sum_x, sum_x2=sum_x2)
+
+    n = count.astype(jnp.float32)
+    xbar = sum_x / jnp.maximum(n, 1.0)
+    sigma1 = tmp.obs_std()
+    xi1 = 1.0 / (sigma1 * sigma1)
+    xi2 = 1.0 / (state.prior_sigma2 * state.prior_sigma2)
+
+    denom = n * xi1 + xi2
+    post_mu = (n * xi1 * xbar + state.prior_mu * xi2) / denom   # Eq. 19
+    post_sigma = jnp.sqrt(1.0 / denom)                          # Eq. 20
+
+    # Only the pulled arm's posterior changes.
+    new_mu = jnp.where(onehot, post_mu, state.mu)
+    new_sigma = jnp.where(onehot, post_sigma, state.sigma2)
+    return dataclasses.replace(
+        tmp, mu=new_mu.astype(jnp.float32), sigma2=new_sigma.astype(jnp.float32))
+
+
+def update_streaming(state: TSState, arm: Array, cost: Array) -> TSState:
+    """One-sample conjugate update (n=1 in Eqs. 19-20 against the *current*
+    posterior as prior).  Equivalent in the fixed-sigma1 case; provided for
+    non-stationary variants where re-deriving from full history is wrong."""
+    arm = jnp.asarray(arm)
+    cost = jnp.asarray(cost, jnp.float32)
+    onehot = jnp.arange(state.n_arms) == arm
+
+    count = state.count + onehot.astype(jnp.int32)
+    sum_x = state.sum_x + onehot * cost
+    sum_x2 = state.sum_x2 + onehot * cost * cost
+    tmp = dataclasses.replace(state, count=count, sum_x=sum_x, sum_x2=sum_x2)
+
+    sigma1 = tmp.obs_std()
+    xi1 = 1.0 / (sigma1 * sigma1)
+    xi2 = 1.0 / (state.sigma2 * state.sigma2)
+    denom = xi1 + xi2
+    post_mu = (xi1 * cost + state.mu * xi2) / denom
+    post_sigma = jnp.sqrt(1.0 / denom)
+
+    new_mu = jnp.where(onehot, post_mu, state.mu)
+    new_sigma = jnp.where(onehot, post_sigma, state.sigma2)
+    return dataclasses.replace(
+        tmp, mu=new_mu.astype(jnp.float32), sigma2=new_sigma.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# One fused MAIN-loop step and a scan-driver for simulation/tests
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("streaming",))
+def ts_step(state: TSState, key: Array, arm_costs: Array,
+            cost_noise: float = 0.0, streaming: bool = False,
+            ) -> Tuple[TSState, Array, Array]:
+    """One bandit round against a (possibly noisy) cost oracle.
+
+    arm_costs: f32[n_arms] true expected cost per arm this round.
+    Returns (new_state, pulled_arm, observed_cost).
+    """
+    k_sel, k_obs = jax.random.split(key)
+    arm = select_arm(state, k_sel)
+    noise = cost_noise * jax.random.normal(k_obs, (), dtype=jnp.float32)
+    cost = arm_costs[arm] + noise
+    upd = update_streaming if streaming else update
+    return upd(state, arm, cost), arm, cost
+
+
+def run_bandit(key: Array, arm_costs: Array, n_rounds: int,
+               prior_mu: float = 1.0, prior_sigma: float = 1.0,
+               cost_noise: float = 0.0, streaming: bool = False,
+               ) -> Tuple[TSState, Array, Array]:
+    """lax.scan driver: returns (final_state, arms[T], costs[T])."""
+    state = init_state(arm_costs.shape[0], prior_mu, prior_sigma)
+
+    def body(carry, k):
+        st = carry
+        st, arm, cost = ts_step(st, k, arm_costs, cost_noise, streaming)
+        return st, (arm, cost)
+
+    keys = jax.random.split(key, n_rounds)
+    state, (arms, costs) = jax.lax.scan(body, state, keys)
+    return state, arms, costs
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: sliding-window TS for non-stationary serving workloads
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WindowedTSState:
+    """Gaussian-Gaussian TS whose sufficient statistics decay with factor
+    `gamma` per round, bounding the effective history to ~1/(1-gamma) pulls.
+    Handles drifting cost landscapes (diurnal arrival-rate shifts, thermal
+    throttling) where the paper's full-history update goes stale."""
+
+    base: TSState
+    gamma: Array  # scalar decay in (0, 1]
+
+    @property
+    def n_arms(self) -> int:
+        return self.base.n_arms
+
+
+def init_windowed(n_arms: int, gamma: float = 0.98,
+                  prior_mu: float = 1.0, prior_sigma: float = 1.0,
+                  ) -> WindowedTSState:
+    return WindowedTSState(base=init_state(n_arms, prior_mu, prior_sigma),
+                           gamma=jnp.asarray(gamma, jnp.float32))
+
+
+def windowed_update(state: WindowedTSState, arm: Array, cost: Array,
+                    ) -> WindowedTSState:
+    """Decay *all* arms' statistics, then apply the conjugate update.
+
+    Decayed counts are real-valued; Eqs. 19-20 accept fractional n."""
+    b = state.base
+    g = state.gamma
+    onehot = jnp.arange(b.n_arms) == jnp.asarray(arm)
+    cost = jnp.asarray(cost, jnp.float32)
+
+    countf = b.count.astype(jnp.float32) * g + onehot
+    sum_x = b.sum_x * g + onehot * cost
+    sum_x2 = b.sum_x2 * g + onehot * cost * cost
+
+    n = countf
+    xbar = sum_x / jnp.maximum(n, 1e-6)
+    var = sum_x2 / jnp.maximum(n, 1e-6) - xbar * xbar
+    sigma1 = jnp.where(n >= 2.0, jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)),
+                                             _MIN_OBS_STD),
+                       jnp.maximum(b.prior_sigma2, _MIN_OBS_STD))
+    xi1 = 1.0 / (sigma1 * sigma1)
+    xi2 = 1.0 / (b.prior_sigma2 * b.prior_sigma2)
+    denom = n * xi1 + xi2
+    post_mu = (n * xi1 * xbar + b.prior_mu * xi2) / denom
+    post_sigma = jnp.sqrt(1.0 / denom)
+
+    # Posterior recomputed for every arm (all decayed).
+    newb = dataclasses.replace(
+        b,
+        mu=jnp.where(n > 0, post_mu, b.prior_mu).astype(jnp.float32),
+        sigma2=jnp.where(n > 0, post_sigma, b.prior_sigma2).astype(jnp.float32),
+        count=jnp.round(countf).astype(jnp.int32),
+        sum_x=sum_x,
+        sum_x2=sum_x2,
+    )
+    return WindowedTSState(base=newb, gamma=g)
+
+
+def windowed_select(state: WindowedTSState, key: Array,
+                    active_mask: Optional[Array] = None) -> Array:
+    return select_arm(state.base, key, active_mask)

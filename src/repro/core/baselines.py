@@ -1,0 +1,215 @@
+"""Search baselines: grid search (paper's comparison), UCB1, epsilon-greedy,
+random.  All share the bandit interface: select(state, key) -> arm,
+update(state, arm, cost) -> state, so the controller/simulator can swap
+policies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bandit
+
+Array = jax.Array
+
+
+class Policy(Protocol):
+    def init(self, n_arms: int): ...
+    def select(self, state, key: Array, t: Array) -> Array: ...
+    def update(self, state, arm: Array, cost: Array): ...
+
+
+# ---------------------------------------------------------------------------
+# Grid search: pull arms round-robin (paper: uniform 1/49 exploration).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridState:
+    next_arm: Array    # i32 scalar
+    n_arms_: Array     # i32 scalar (kept in state so the pytree is static-free)
+    count: Array       # i32[n]
+    sum_x: Array       # f32[n]
+
+
+class GridSearch:
+    """Deterministic sweep over all arms in index order; after one full pass
+    it commits to the empirical argmin (how the paper's baseline serves after
+    its 49 search rounds)."""
+
+    def init(self, n_arms: int) -> GridState:
+        return GridState(next_arm=jnp.asarray(0, jnp.int32),
+                         n_arms_=jnp.asarray(n_arms, jnp.int32),
+                         count=jnp.zeros((n_arms,), jnp.int32),
+                         sum_x=jnp.zeros((n_arms,), jnp.float32))
+
+    def select(self, state: GridState, key: Array, t: Array) -> Array:
+        del key
+        n = state.n_arms_
+        swept = jnp.all(state.count > 0)
+        mean = state.sum_x / jnp.maximum(state.count, 1).astype(jnp.float32)
+        mean = jnp.where(state.count > 0, mean, jnp.inf)
+        return jnp.where(swept, jnp.argmin(mean).astype(jnp.int32),
+                         state.next_arm % n)
+
+    def update(self, state: GridState, arm: Array, cost: Array) -> GridState:
+        onehot = jnp.arange(state.count.shape[0]) == arm
+        return GridState(
+            next_arm=(state.next_arm + 1) % state.n_arms_,
+            n_arms_=state.n_arms_,
+            count=state.count + onehot.astype(jnp.int32),
+            sum_x=state.sum_x + onehot * jnp.asarray(cost, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# UCB1 (minimization form): pull argmin(mean - c*sqrt(2 ln t / n_i)).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UCBState:
+    count: Array   # i32[n]
+    sum_x: Array   # f32[n]
+
+
+class UCB1:
+    def __init__(self, c: float = 1.0):
+        self.c = float(c)
+
+    def init(self, n_arms: int) -> UCBState:
+        return UCBState(count=jnp.zeros((n_arms,), jnp.int32),
+                        sum_x=jnp.zeros((n_arms,), jnp.float32))
+
+    def select(self, state: UCBState, key: Array, t: Array) -> Array:
+        del key
+        n = state.count.astype(jnp.float32)
+        mean = state.sum_x / jnp.maximum(n, 1.0)
+        tf = jnp.maximum(t.astype(jnp.float32), 1.0)
+        bonus = self.c * jnp.sqrt(2.0 * jnp.log(tf) / jnp.maximum(n, 1.0))
+        lcb = jnp.where(state.count > 0, mean - bonus, -jnp.inf)
+        return jnp.argmin(lcb).astype(jnp.int32)
+
+    def update(self, state: UCBState, arm: Array, cost: Array) -> UCBState:
+        onehot = jnp.arange(state.count.shape[0]) == arm
+        return UCBState(count=state.count + onehot.astype(jnp.int32),
+                        sum_x=state.sum_x + onehot * jnp.asarray(cost, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Epsilon-greedy.
+# ---------------------------------------------------------------------------
+
+class EpsilonGreedy:
+    def __init__(self, eps: float = 0.1):
+        self.eps = float(eps)
+
+    def init(self, n_arms: int) -> UCBState:
+        return UCBState(count=jnp.zeros((n_arms,), jnp.int32),
+                        sum_x=jnp.zeros((n_arms,), jnp.float32))
+
+    def select(self, state: UCBState, key: Array, t: Array) -> Array:
+        del t
+        n_arms = state.count.shape[0]
+        k_eps, k_arm = jax.random.split(key)
+        mean = state.sum_x / jnp.maximum(state.count, 1).astype(jnp.float32)
+        mean = jnp.where(state.count > 0, mean, -jnp.inf)  # force exploration
+        greedy = jnp.argmin(jnp.where(state.count > 0, mean, jnp.inf))
+        unpulled = jnp.argmin(state.count)  # prefer an unpulled arm
+        greedy = jnp.where(jnp.any(state.count == 0), unpulled, greedy)
+        rand = jax.random.randint(k_arm, (), 0, n_arms)
+        explore = jax.random.uniform(k_eps) < self.eps
+        return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+    def update(self, state: UCBState, arm: Array, cost: Array) -> UCBState:
+        onehot = jnp.arange(state.count.shape[0]) == arm
+        return UCBState(count=state.count + onehot.astype(jnp.int32),
+                        sum_x=state.sum_x + onehot * jnp.asarray(cost, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Random.
+# ---------------------------------------------------------------------------
+
+class RandomPolicy:
+    def init(self, n_arms: int) -> UCBState:
+        return UCBState(count=jnp.zeros((n_arms,), jnp.int32),
+                        sum_x=jnp.zeros((n_arms,), jnp.float32))
+
+    def select(self, state: UCBState, key: Array, t: Array) -> Array:
+        del t
+        return jax.random.randint(key, (), 0, state.count.shape[0]
+                                  ).astype(jnp.int32)
+
+    def update(self, state: UCBState, arm: Array, cost: Array) -> UCBState:
+        onehot = jnp.arange(state.count.shape[0]) == arm
+        return UCBState(count=state.count + onehot.astype(jnp.int32),
+                        sum_x=state.sum_x + onehot * jnp.asarray(cost, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Camel (Thompson sampling) wrapped in the same interface.
+# ---------------------------------------------------------------------------
+
+class CamelTS:
+    """prior_mu / prior_sigma may be scalars or per-arm arrays (structured
+    priors from core.priors)."""
+
+    def __init__(self, prior_mu=1.0, prior_sigma=1.0, streaming: bool = False):
+        self.prior_mu = prior_mu
+        self.prior_sigma = prior_sigma
+        self.streaming = streaming
+
+    def init(self, n_arms: int) -> bandit.TSState:
+        return bandit.init_state(n_arms, self.prior_mu, self.prior_sigma)
+
+    def select(self, state: bandit.TSState, key: Array, t: Array) -> Array:
+        del t
+        return bandit.select_arm(state, key).astype(jnp.int32)
+
+    def update(self, state: bandit.TSState, arm: Array, cost: Array
+               ) -> bandit.TSState:
+        if self.streaming:
+            return bandit.update_streaming(state, arm, cost)
+        return bandit.update(state, arm, cost)
+
+
+class CamelWindowedTS:
+    """Sliding-window Camel for non-stationary workloads (beyond paper)."""
+
+    def __init__(self, gamma: float = 0.98, prior_mu: float = 1.0,
+                 prior_sigma: float = 1.0):
+        self.gamma = gamma
+        self.prior_mu = prior_mu
+        self.prior_sigma = prior_sigma
+
+    def init(self, n_arms: int) -> bandit.WindowedTSState:
+        return bandit.init_windowed(n_arms, self.gamma, self.prior_mu,
+                                    self.prior_sigma)
+
+    def select(self, state, key: Array, t: Array) -> Array:
+        del t
+        return bandit.windowed_select(state, key).astype(jnp.int32)
+
+    def update(self, state, arm: Array, cost: Array):
+        return bandit.windowed_update(state, arm, cost)
+
+
+POLICIES = {
+    "camel": CamelTS,
+    "camel_windowed": CamelWindowedTS,
+    "grid": GridSearch,
+    "ucb1": UCB1,
+    "eps_greedy": EpsilonGreedy,
+    "random": RandomPolicy,
+}
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    try:
+        return POLICIES[name](**kwargs)
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(POLICIES)}")

@@ -1,0 +1,130 @@
+"""Online controller: the MAIN loop of Algorithm 1, decoupled from the
+environment.  The environment is anything that maps an arm's knob values to
+an observed (energy/request, latency/request) pair — the analytical
+simulator, the event-driven serving simulator, or a real engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arms import ArmSpace
+from repro.core.cost import CostModel, RegretTracker, summarize_run
+
+
+class Environment(Protocol):
+    """Pull an arm; observe per-request energy (J) and latency (s)."""
+
+    def pull(self, knobs: Dict[str, object], round_index: int
+             ) -> Tuple[float, float]: ...
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    t: int
+    arm: int
+    knobs: Dict[str, object]
+    energy: float
+    latency: float
+    cost: float
+    regret: float
+
+
+@dataclasses.dataclass
+class ControllerResult:
+    records: List[RoundRecord]
+    final_state: object
+    best_arm: int
+    best_knobs: Dict[str, object]
+    cum_regret: np.ndarray
+
+    def summary(self) -> dict:
+        e = np.array([r.energy for r in self.records])
+        l = np.array([r.latency for r in self.records])
+        c = np.array([r.cost for r in self.records])
+        out = summarize_run(e, l, c)
+        out["cum_regret"] = float(self.cum_regret[-1]) if len(
+            self.cum_regret) else 0.0
+        out["best_arm"] = self.best_arm
+        out["best_knobs"] = dict(self.best_knobs)
+        return out
+
+    def arm_counts(self, n_arms: int) -> np.ndarray:
+        counts = np.zeros(n_arms, dtype=np.int64)
+        for r in self.records:
+            counts[r.arm] += 1
+        return counts
+
+
+class Controller:
+    """Runs `policy` against `env` for T rounds (Alg. 1 MAIN).
+
+    The controller owns cost computation (Eq. 1 via CostModel) and regret
+    accounting; the environment only reports raw (energy, latency).
+    """
+
+    def __init__(self, space: ArmSpace, policy, cost_model: CostModel,
+                 optimal_cost: Optional[float] = None, seed: int = 0):
+        self.space = space
+        self.policy = policy
+        self.cost_model = cost_model
+        self.optimal_cost = optimal_cost
+        self.key = jax.random.PRNGKey(seed)
+
+    def run(self, env: Environment, n_rounds: int) -> ControllerResult:
+        state = self.policy.init(self.space.n_arms)
+        regret = RegretTracker(self.optimal_cost
+                               if self.optimal_cost is not None else 0.0)
+        records: List[RoundRecord] = []
+
+        for t in range(n_rounds):
+            self.key, sub = jax.random.split(self.key)
+            arm = int(self.policy.select(state, sub, jnp.asarray(t + 1)))
+            knobs = self.space.values(arm)
+            energy, latency = env.pull(knobs, t)
+            cost = float(self.cost_model.cost(energy, latency))
+            state = self.policy.update(state, jnp.asarray(arm),
+                                       jnp.asarray(cost, jnp.float32))
+            r = regret.record(cost) if self.optimal_cost is not None else 0.0
+            records.append(RoundRecord(t=t, arm=arm, knobs=knobs,
+                                       energy=energy, latency=latency,
+                                       cost=cost, regret=float(r)))
+
+        best_arm = self._commit(state, records)
+        return ControllerResult(
+            records=records, final_state=state, best_arm=best_arm,
+            best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
+
+    def _commit(self, state, records) -> int:
+        """The deployed configuration after search: the arm with the lowest
+        posterior/empirical mean cost (ties broken toward most-pulled)."""
+        mean = getattr(state, "mean_cost", None)
+        if callable(mean):
+            return int(jnp.argmin(mean()))
+        base = getattr(state, "base", None)
+        if base is not None and hasattr(base, "mean_cost"):
+            return int(jnp.argmin(base.mean_cost()))
+        # Grid/UCB-style states expose count & sum_x.
+        counts = np.asarray(state.count)
+        sums = np.asarray(state.sum_x)
+        m = np.where(counts > 0, sums / np.maximum(counts, 1), np.inf)
+        return int(np.argmin(m))
+
+
+def landscape_optimal(space: ArmSpace, env_expected: Callable[[Dict], Tuple[float, float]],
+                      cost_model: CostModel) -> Tuple[int, float]:
+    """Exhaustively evaluate the noise-free landscape to find the optimal arm
+    and its cost (used to seed RegretTracker, and for Fig. 1)."""
+    best_arm, best_cost = -1, float("inf")
+    for arm, knobs in space.enumerate():
+        e, l = env_expected(knobs)
+        c = float(cost_model.cost(e, l))
+        if c < best_cost:
+            best_arm, best_cost = arm, c
+    return best_arm, best_cost

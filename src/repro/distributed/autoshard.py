@@ -1,0 +1,131 @@
+"""Ambient-mesh sharding constraints inside model code.
+
+Model functions are pure and mesh-agnostic; when they run under
+`jax.set_mesh(mesh)` these helpers inject `with_sharding_constraint`s that
+steer GSPMD.  With no mesh (unit tests, single-device smoke runs) every
+helper is a no-op.
+
+The attention plan solves the GQA/TP mismatch: when neither the KV-head nor
+the q-per-kv group dim divides the model axis, GSPMD replicates the
+quadratic attention einsums across the model axis (16x wasted FLOPs —
+observed directly in the smollm dry-run HLO).  The fallback shards the
+*query-sequence* dim instead (context parallelism), which is always
+divisible for our shapes and keeps attention FLOPs balanced.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")
+
+
+def ambient_axes() -> Optional[dict]:
+    """{axis: size} of the current abstract mesh, or None."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # noqa: BLE001
+        return None
+    if am is None or getattr(am, "empty", True):
+        return None
+    return dict(am.shape)
+
+
+def data_axes(axes: dict) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in axes)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint iff a mesh context exists."""
+    axes = ambient_axes()
+    if not axes:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def shard_batch(x):
+    """Shard leading (batch) dim over the data axes."""
+    axes = ambient_axes()
+    if not axes:
+        return x
+    da = data_axes(axes)
+    if not da:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(da, *([None] * (x.ndim - 1))))
+
+
+import os
+
+
+def attn_plan(n_kv_heads: int, n_groups: int, q_len: int,
+              kv_len: int = 0) -> str:
+    """How to shard the attention einsums over the model axis.
+
+    Returns one of:
+      "kv"    — shard the KV-head dim          (kv % tp == 0)
+      "group" — shard the q-per-kv group dim   (groups % tp == 0)
+      "qseq"  — shard the query-sequence dim
+      "kvseq" — shard the KV-sequence dim      (split-K softmax)
+      "none"  — leave to GSPMD                 (decode with tiny q)
+
+    REPRO_ATTN_PLAN overrides the fallback choice for perf experiments.
+    """
+    axes = ambient_axes()
+    if not axes or MODEL_AXIS not in axes:
+        return "none"
+    tp = axes[MODEL_AXIS]
+    if tp == 1:
+        return "none"
+    override = os.environ.get("REPRO_ATTN_PLAN", "")
+    if override:
+        return override
+    if n_kv_heads % tp == 0:
+        return "kv"
+    if n_groups % tp == 0:
+        return "group"
+    if q_len > 1 and q_len % tp == 0:
+        return "qseq"
+    if kv_len and kv_len % tp == 0:
+        return "kvseq"
+    return "none"
+
+
+def constrain_attn_logits(logits, plan: str):
+    """logits: [B, KV, G, Q, S]."""
+    axes = ambient_axes()
+    if not axes or plan == "none":
+        return logits
+    da = data_axes(axes)
+    b = da if da else None
+    if plan == "kv":
+        spec = P(b, MODEL_AXIS, None, None, None)
+    elif plan == "group":
+        spec = P(b, None, MODEL_AXIS, None, None)
+    elif plan == "kvseq":
+        spec = P(b, None, None, None, MODEL_AXIS)
+    else:  # qseq
+        spec = P(b, None, None, MODEL_AXIS, None)
+    return jax.lax.with_sharding_constraint(logits, spec)
+
+
+def constrain_attn_ctx(ctx, plan: str):
+    """ctx (pre-reshape): [B, Q, KV, G, D]."""
+    axes = ambient_axes()
+    if not axes or plan == "none":
+        return ctx
+    da = data_axes(axes)
+    b = da if da else None
+    if plan == "kv":
+        spec = P(b, None, MODEL_AXIS, None, None)
+    elif plan == "group":
+        spec = P(b, None, None, MODEL_AXIS, None)
+    elif plan == "kvseq":
+        spec = P(b, None, None, None, None)  # psum output: replicated heads
+    else:
+        spec = P(b, MODEL_AXIS, None, None, None)
+    return jax.lax.with_sharding_constraint(ctx, spec)

@@ -1,0 +1,132 @@
+"""HLO collective extraction for the roofline's collective term.
+
+`compiled.cost_analysis()` does not expose collective traffic, so we parse
+the post-SPMD HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op, with its output shape, dtype and
+replica-group size, mapped to ring-model bytes-on-the-wire per device:
+
+    all-gather        (g-1)/g * full_bytes
+    reduce-scatter    (g-1)/g * full_bytes
+    all-reduce        2 (g-1)/g * full_bytes      (RS + AG)
+    all-to-all        (g-1)/g * full_bytes
+    collective-permute  full_bytes
+
+where full_bytes is the op's (logical) payload size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?\s*(\w+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_TUPLE_COLL_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: tuple
+    payload_bytes: int
+    group_size: int
+    wire_bytes: float     # ring-model bytes per device
+
+
+def _shape_bytes(dtype: str, dims_str: str) -> int:
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _wire(kind: str, payload: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    frac = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * frac * payload
+    if kind == "collective-permute":
+        return float(payload)
+    return frac * payload
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1,
+                      ) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        if ("all-gather(" not in line and "all-reduce(" not in line
+                and "reduce-scatter(" not in line
+                and "all-to-all(" not in line
+                and "collective-permute(" not in line
+                and "-start(" not in line):
+            continue
+        if "-done(" in line or "-update(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        shapes: List[tuple] = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes.append((m.group(1), m.group(2)))
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                for sm in _SHAPE_RE.finditer(mt.group(1)):
+                    shapes.append((sm.group(1), sm.group(2)))
+        if kind is None:
+            continue
+        payload = sum(_shape_bytes(dt, dm) for dt, dm in shapes)
+        g = _group_size(line, default_group)
+        ops.append(CollectiveOp(
+            kind=kind, dtype=shapes[0][0] if shapes else "?",
+            shape=tuple(shapes[0][1].split(",")) if shapes else (),
+            payload_bytes=payload, group_size=g,
+            wire_bytes=_wire(kind, payload, g)))
+    return ops
+
+
+def summarize(ops: List[CollectiveOp]) -> Dict[str, float]:
+    by_kind: Dict[str, float] = {}
+    total_payload = 0.0
+    total_wire = 0.0
+    for op in ops:
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.wire_bytes
+        total_payload += op.payload_bytes
+        total_wire += op.wire_bytes
+    return {
+        "n_collectives": len(ops),
+        "payload_bytes": total_payload,
+        "wire_bytes_per_device": total_wire,
+        **{f"wire_{k}": v for k, v in sorted(by_kind.items())},
+    }

@@ -1,0 +1,257 @@
+"""Parameter / input / cache PartitionSpecs for every model family.
+
+Axis conventions (launch/mesh.py):
+  single-pod : ("data", "model")             16 x 16 = 256 chips
+  multi-pod  : ("pod", "data", "model")      2 x 16 x 16 = 512 chips
+
+The batch axis shards over ("pod", "data") (pure DP across pods); tensor /
+expert / sequence parallelism live on "model".  Rules are path-based over
+the parameter pytree, so new archs compose for free as long as they reuse
+the shared layer naming.
+
+GQA caches: when n_kv_heads is not divisible by the model-axis size the KV
+*sequence* dim is sharded instead (split-K decode attention; GSPMD inserts
+the softmax partial reductions) — this is also what makes long_500k
+batch=1 shardable at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.registry import ModelBundle
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Logical axis names for the current mesh."""
+    data: Tuple[str, ...] = ("data",)     # batch axes (may include "pod")
+    model: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "Axes":
+        names = mesh.axis_names
+        if "pod" in names:
+            return Axes(data=("pod", "data"), model="model")
+        return Axes(data=("data",), model="model")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+_COL = "COL"    # shard last dim (output features) on model axis
+_ROW = "ROW"    # shard second-to-last dim (input features) on model axis
+_VOCAB = "VOCAB"
+_EXPERT = "EXPERT"
+_REP = "REP"
+
+# Rules are tried in order; first regex match wins.  Paths include the
+# stacked-layer container names ("layers", "enc_layers", "rec_blocks", ...)
+# so leading layer dims are handled by padding specs to rank.
+_PARAM_RULES = [
+    # --- MoE (mode-dependent; handled specially below) --------------------
+    (re.compile(r".*moe/router$"), _REP),
+    (re.compile(r".*moe/w_(gate|up)$"), "MOE_IN"),
+    (re.compile(r".*moe/w_down$"), "MOE_OUT"),
+    # --- attention ---------------------------------------------------------
+    (re.compile(r".*attn/w[qkv]$"), _COL),
+    (re.compile(r".*attn/wo$"), _ROW),
+    (re.compile(r".*attn/b[qkv]$"), _COL),
+    (re.compile(r".*attn/bo$"), _REP),
+    (re.compile(r".*attn/(q|k)_norm.*"), _REP),
+    # --- dense / gated MLP --------------------------------------------------
+    (re.compile(r".*mlp.?/w_(gate|up|in)$"), _COL),
+    (re.compile(r".*mlp.?/w_(down|out)$"), _ROW),
+    (re.compile(r".*mlp.?/b_(gate|up|in)$"), _COL),
+    (re.compile(r".*mlp.?/b_(down|out)$"), _REP),
+    # --- rwkv6 time/channel mix --------------------------------------------
+    (re.compile(r".*time_mix/w[rkvg]$"), _COL),
+    (re.compile(r".*time_mix/wo$"), _ROW),
+    (re.compile(r".*time_mix/bonus$"), "HEAD0"),
+    (re.compile(r".*time_mix/(maa|decay).*"), _REP),
+    (re.compile(r".*channel_mix/wk$"), _COL),
+    (re.compile(r".*channel_mix/wv$"), _ROW),
+    (re.compile(r".*channel_mix/wr$"), _COL),
+    (re.compile(r".*channel_mix/(maa).*"), _REP),
+    # --- rglru ---------------------------------------------------------------
+    (re.compile(r".*rec_blocks/w_(x|gate)$"), _COL),
+    (re.compile(r".*rec_blocks/w_out$"), _ROW),
+    (re.compile(r".*rec_blocks/conv_[wb]$"), "LAST"),
+    (re.compile(r".*rec_blocks/(w_a|w_i)$"), _COL),
+    (re.compile(r".*rec_blocks/(b_a|b_i|lru_lambda)$"), "LAST"),
+    # --- embeddings ----------------------------------------------------------
+    (re.compile(r"^embedding$"), _VOCAB),
+    (re.compile(r"^lm_head$"), _VOCAB),
+    # --- norms & everything small -------------------------------------------
+    (re.compile(r".*"), _REP),
+]
+
+
+def _spec_for(kind: str, shape, axes: Axes, moe_mode: str,
+              msize: int) -> P:
+    """Build the spec, dropping any axis whose dim is not divisible by the
+    model-axis size (pjit in_shardings require exact divisibility)."""
+    m = axes.model
+    ndim = len(shape)
+
+    def pad(spec_tail):
+        spec = [None] * (ndim - len(spec_tail)) + list(spec_tail)
+        # divisibility guard
+        for i, ax in enumerate(spec):
+            if ax == m and shape[i] % msize != 0:
+                spec[i] = None
+        return P(*spec)
+
+    if kind == _REP:
+        return P()
+    if kind == _COL:
+        return pad([None, m]) if ndim >= 2 else pad([m])
+    if kind == _ROW:
+        return pad([m, None])
+    if kind == "LAST":
+        return pad([m])
+    if kind == _VOCAB:
+        # vocab-sharded when divisible, else shard d_model
+        if shape[0] % msize == 0:
+            return P(m, None)
+        if shape[1] % msize == 0:
+            return P(None, m)
+        return P()
+    if kind == "HEAD0":
+        # (L, H, N) or (H, N): shard head dim
+        return pad([m, None])
+    if kind == "MOE_IN":   # (L, E, d, f)
+        if moe_mode == "expert":
+            return pad([m, None, None])
+        return pad([None, None, m])
+    if kind == "MOE_OUT":  # (L, E, f, d)
+        if moe_mode == "expert":
+            return pad([m, None, None])
+        return pad([None, m, None])
+    raise ValueError(kind)
+
+
+def param_pspecs(bundle: ModelBundle, axes: Axes, msize: int = 16) -> Any:
+    """PartitionSpec tree mirroring the parameter tree.  `msize` is the
+    model-axis size (divisibility guard)."""
+    moe_mode = "expert"
+    moe = getattr(bundle.cfg, "moe", None)
+    if moe is not None:
+        moe_mode = moe.shard_mode
+    abstract = bundle.abstract_params()
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        for rex, kind in _PARAM_RULES:
+            if rex.match(ps):
+                return _spec_for(kind, leaf.shape, axes, moe_mode, msize)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state specs (m/v mirror params; step replicated)
+# ---------------------------------------------------------------------------
+
+def opt_pspecs(bundle: ModelBundle, axes: Axes, msize: int = 16) -> Any:
+    from repro.training.optimizer import AdamWState
+    p = param_pspecs(bundle, axes, msize)
+    return AdamWState(step=P(), m=p, v=p)
+
+
+# ---------------------------------------------------------------------------
+# Input / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_pspec(axes: Axes, ndim: int) -> P:
+    return P(axes.data, *([None] * (ndim - 1)))
+
+
+def input_pspecs(inputs: Any, axes: Axes, dsize: int = 16) -> Any:
+    """Shard the leading (batch) dim of every input when divisible by the
+    total data-axis size; scalars and small batches replicated."""
+    def rule(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % dsize != 0:
+            return P()
+        return batch_pspec(axes, leaf.ndim)
+    return jax.tree.map(rule, inputs)
+
+
+def cache_pspecs(bundle: ModelBundle, cache_abstract: Any, axes: Axes,
+                 mesh: Mesh) -> Any:
+    """KV caches: (L, B, S, KVH, HD) -> batch on data; KVH on model when
+    divisible, else S on model (split-K decode).  Recurrent states:
+    (L, B, H, N, N) / (L, B, W): width/head dims on model."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get(axes.model, 1)
+    dsize = int(np.prod([sizes[a] for a in axes.data]))
+
+    def dax(n):
+        """data axes if batch size n divides, else None."""
+        return axes.data if n % dsize == 0 else None
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if nd == 0:
+            return P()
+        if re.search(r"(^|/)(k|v)(_scale)?$", ps) and nd == 5:
+            L, B, S, kvh, hd = leaf.shape
+            b_spec = dax(B)
+            kv_ok = kvh % msize == 0
+            if b_spec is None and S % (dsize * msize) == 0 and not kv_ok:
+                # batch=1 long-context: stack seq over data+model (split-K)
+                return P(None, None, axes.data + (axes.model,), None, None)
+            if b_spec is None and S % dsize == 0 and kv_ok:
+                return P(None, None, axes.data, axes.model, None)
+            if kv_ok:
+                return P(None, b_spec, None, axes.model, None)
+            if S % msize == 0:
+                return P(None, b_spec, axes.model, None, None)
+            return P(None, b_spec, None, None, None)
+        if ps.endswith("wkv") and nd == 5:       # rwkv6 (L,B,H,N,N)
+            L, B, H, _, _ = leaf.shape
+            return P(None, dax(B), axes.model if H % msize == 0 else None,
+                     None, None)
+        if "shift" in ps and nd == 3:            # (L,B,D)
+            return P(None, dax(leaf.shape[1]), None)
+        if ps.endswith("lru_h") and nd == 3:     # (L,B,W)
+            return P(None, dax(leaf.shape[1]),
+                     axes.model if leaf.shape[2] % msize == 0 else None)
+        if ps.endswith("conv_tail") and nd == 4:  # (L,B,3,W)
+            return P(None, dax(leaf.shape[1]), None,
+                     axes.model if leaf.shape[3] % msize == 0 else None)
+        if nd >= 2:
+            return P(None, dax(leaf.shape[1]), *([None] * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_abstract)
+
+
+# ---------------------------------------------------------------------------
+# NamedSharding helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

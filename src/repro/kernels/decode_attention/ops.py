@@ -1,0 +1,22 @@
+"""Public entry point for the split-K decode attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_fwd)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
+                     block_kv: int = 512, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return decode_attention_fwd(q, k, v, kv_len, scale=scale,
+                                block_kv=block_kv, interpret=interpret)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale: Optional[float] = None):
+    """q: [B, H, D]; k/v: [B, S, KVH, D]; kv_len scalar -> [B, H, D]."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, d)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    mask = jnp.arange(s)[None, None, None, :] < kv_len
+    sc = jnp.where(mask, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Public entry point: Pallas flash attention on TPU, interpret-mode
+execution elsewhere (CPU tests), oracle in ref.py."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, scale: Optional[float] = None,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_kv: int = 512,
+                    interpret: Optional[bool] = None):
+    """Dispatches the Pallas kernel; `interpret=None` auto-selects
+    interpret mode off-TPU so tests/examples run on CPU."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_fwd(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,19 @@
+"""Public entry point for the grouped expert GEMM kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.moe_gemm.moe_gemm import moe_gemm
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+def grouped_gemm(x, w, *, interpret: Optional[bool] = None, **kw):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return moe_gemm(x, w, interpret=interpret, **kw)
+
+
+__all__ = ["grouped_gemm", "moe_gemm_ref"]

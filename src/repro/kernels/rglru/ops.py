@@ -1,0 +1,21 @@
+"""Public entry point for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.rglru.rglru import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+def rglru(log_a, b, *, chunk: int = 16, block_w: int = 512,
+          interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rglru_scan(log_a, b, chunk=chunk, block_w=block_w,
+                      interpret=interpret)
+
+
+__all__ = ["rglru", "rglru_scan_ref"]

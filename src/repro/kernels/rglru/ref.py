@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b):
+    """Sequential h_t = exp(log_a_t) h_{t-1} + b_t; h0 = 0.
+    log_a, b: [B, S, W] -> (h [B,S,W], h_last [B,W])."""
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la) * h + bb
+        return h, h
+
+    xs = (jnp.moveaxis(log_a, 1, 0), jnp.moveaxis(b, 1, 0))
+    h0 = jnp.zeros(log_a.shape[::2], log_a.dtype)  # [B, W]
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1), h_last

@@ -1,0 +1,20 @@
+"""Public entry point for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_fused
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6,
+            interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rmsnorm_fused(x, scale, eps=eps, interpret=interpret)
+
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

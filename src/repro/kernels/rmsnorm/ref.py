@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+from repro.models.common import rmsnorm as _rmsnorm
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    return _rmsnorm({"scale": scale}, x, eps=eps, unit_offset=True)

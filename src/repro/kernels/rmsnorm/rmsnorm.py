@@ -1,0 +1,55 @@
+"""Pallas TPU fused RMSNorm kernel: one HBM read + one write per row
+(reduction + scale fused), vs. the naive lowering's separate
+mean-square / rsqrt / mul passes.
+
+Grid: (n_row_blocks,); each step normalizes a (block_rows, D) tile held in
+VMEM.  Gemma-style (1 + scale) convention matches models/common.rmsnorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps)
+    s = 1.0 + scale_ref[...].astype(jnp.float32)
+    o_ref[...] = (xn * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm_fused(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+                  block_rows: int = 256, interpret: bool = False):
+    """x: [..., D]; scale: [D].  Returns normalized x (gemma 1+scale)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    n = xf.shape[0]
+    block_rows = min(block_rows, n)
+    pad = (-n) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    nb = xf.shape[0] // block_rows
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        interpret=interpret,
+    )(xf, scale)
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape)

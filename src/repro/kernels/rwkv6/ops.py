@@ -1,0 +1,21 @@
+"""Public entry point for the chunked WKV6 kernel."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels.rwkv6.rwkv6 import wkv6_chunked
+from repro.kernels.rwkv6.ref import wkv6_sequential
+
+
+def wkv6(r, k, v, logw, bonus, state, *, chunk: int = 32,
+         interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return wkv6_chunked(r, k, v, logw, bonus, state, chunk=chunk,
+                        interpret=interpret)
+
+
+__all__ = ["wkv6", "wkv6_sequential"]

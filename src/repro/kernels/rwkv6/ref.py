@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for WKV6: sequential recurrence (ground truth) and the
+chunked form from models/rwkv6."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv6_chunked as chunked_ref  # noqa: F401
+
+
+def wkv6_sequential(r, k, v, logw, bonus, state):
+    """Token-by-token recurrence.  r/k/v/logw: [B,S,H,N]; bonus [H,N];
+    state fp32 [B,H,N,N] -> (y fp32 [B,S,H,N], final state)."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = jnp.exp(logw.astype(jnp.float32))
+    uf = bonus.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp   # [B,H,N]
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), S

@@ -1,0 +1,299 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+record memory / FLOP / collective statistics for the roofline.
+
+MUST be run as a script or with a fresh process per batch of cells:
+the XLA host-device override below locks in before any other jax usage.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+# --- MUST be the very first lines, before ANY other import ------------------
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# ---------------------------------------------------------------------------
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+import repro.configs as configs_mod
+from repro.configs.specs import SHAPES, DryRunSpec
+from repro.distributed import collectives, hlo_analysis, sharding
+from repro.launch import mesh as mesh_mod
+from repro.launch import steps as steps_mod
+from repro.models.registry import bundle_for
+from repro.training import optimizer as opt_mod
+from repro.training.optimizer import AdamWConfig
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 5e10
+
+
+def _mesh_for(name: str):
+    if name == "single":
+        return mesh_mod.make_production_mesh(multi_pod=False)
+    if name == "multi":
+        return mesh_mod.make_production_mesh(multi_pod=True)
+    raise ValueError(name)
+
+
+def lower_cell(arch: str, shape: str, mesh_name: str,
+               remat: str = "none", moe_shard: str = None,
+               attn_impl: str = None, kv_cache: str = None,
+               extra_tag: str = ""):
+    """Lower + compile one cell.  Returns the result record (dict)."""
+    spec: DryRunSpec = configs_mod.input_specs(arch, shape)
+    if spec is None:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md SS4)"}
+
+    cfg = configs_mod.get(arch)
+    if remat != "none" and hasattr(cfg, "remat"):
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if moe_shard and getattr(cfg, "moe", None) is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, shard_mode=moe_shard))
+    if attn_impl and hasattr(cfg, "attn_impl"):
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    if kv_cache and hasattr(cfg, "kv_cache_dtype"):
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_cache)
+    bundle = bundle_for(cfg)
+
+    mesh = _mesh_for(mesh_name)
+    axes = sharding.Axes.for_mesh(mesh)
+    n_chips = mesh.devices.size
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = sizes.get(axes.model, 1)
+    dsize = int(np.prod([sizes[a] for a in axes.data]))
+
+    p_specs = sharding.param_pspecs(bundle, axes, msize)
+    params_sds = bundle.abstract_params()
+
+    nd = lambda tree: sharding.named(mesh, tree)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if spec.kind == "train":
+            opt_cfg = AdamWConfig()
+            opt_sds = jax.eval_shape(opt_mod.init, params_sds)
+            o_specs = sharding.opt_pspecs(bundle, axes, msize)
+            in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+            step = steps_mod.make_train_step(bundle, opt_cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(nd(p_specs), nd(o_specs), nd(in_specs)),
+                out_shardings=(nd(p_specs), nd(o_specs), None))
+            lowered = jitted.lower(params_sds, opt_sds, spec.inputs)
+        elif spec.kind == "prefill":
+            in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+            prefix = getattr(cfg, "num_prefix_embeddings", 0)
+            clen = spec.seq_len + prefix
+            step = steps_mod.make_prefill_step(bundle, cache_len=clen)
+            cache_sds = jax.eval_shape(
+                lambda: bundle.init_cache(spec.batch, clen))
+            c_specs = sharding.cache_pspecs(bundle, cache_sds, axes, mesh)
+
+            def pstep(params, inputs):
+                return step(params, **inputs)
+
+            jitted = jax.jit(pstep,
+                             in_shardings=(nd(p_specs), nd(in_specs)),
+                             out_shardings=(None, nd(c_specs)))
+            lowered = jitted.lower(params_sds, spec.inputs)
+        else:  # decode
+            cache_sds = jax.eval_shape(
+                lambda: bundle.init_cache(spec.batch, spec.seq_len))
+            c_specs = sharding.cache_pspecs(bundle, cache_sds, axes, mesh)
+            in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+            step = steps_mod.make_serve_step(bundle)
+            jitted = jax.jit(
+                step,
+                in_shardings=(nd(p_specs), nd(c_specs),
+                              nd(in_specs["token"]), nd(in_specs["pos"])),
+                out_shardings=(None, nd(c_specs)))
+            lowered = jitted.lower(params_sds, cache_sds,
+                                   spec.inputs["token"], spec.inputs["pos"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    st = hlo_analysis.analyze(hlo, default_group=16)
+
+    model_shards = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+        "model", 1)
+    params_per_dev = bundle.n_params / model_shards
+
+    # Per-device roofline numerators from the loop-corrected HLO parse
+    # (see distributed/hlo_analysis.py).  raw cost_analysis kept for
+    # reference but it under-counts while bodies and over-counts fusion.
+    flops = st.flops
+    hbm_bytes = st.dot_bytes
+    if spec.kind == "train":
+        # AdamW element-wise traffic: m/v fp32 r+w (16B) + param bf16 r+w
+        # (4B) + grad read (4B) per parameter per device.
+        hbm_bytes += 24.0 * params_per_dev
+    wire_bytes = st.collective_wire_bytes
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = wire_bytes / ICI_BW
+
+    # MODEL_FLOPS (useful work): 6 N D for train, 2 N_active per token for
+    # inference, per device.
+    n_active = bundle.n_active_params
+    # enc-dec prefill encodes the (capped) source and decodes ONE token;
+    # its useful tokens are src+1, not the target length (DESIGN.md SS4).
+    eff_seq = spec.seq_len
+    if bundle.family == "encdec" and spec.kind == "prefill":
+        eff_seq = min(spec.seq_len, bundle.cfg.max_source_len) + 1
+    if spec.kind == "train":
+        useful = 6.0 * n_active * spec.batch * eff_seq / n_chips
+    elif spec.kind == "prefill":
+        useful = 2.0 * n_active * spec.batch * eff_seq / n_chips
+    else:
+        useful = 2.0 * n_active * spec.batch * 1 / n_chips
+
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "kind": spec.kind, "status": "ok",
+        "tag": extra_tag, "remat": remat, "attn_impl": attn_impl,
+        "moe_shard": moe_shard or getattr(getattr(cfg, "moe", None),
+                                          "shard_mode", None),
+        "n_chips": n_chips,
+        "batch": spec.batch, "seq_len": spec.seq_len,
+        "n_params": bundle.n_params, "n_active_params": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+            "total_per_device": (mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 + mem.output_size_in_bytes),
+        },
+        "cost": {
+            "flops": flops, "hbm_bytes": hbm_bytes,
+            "wire_bytes": wire_bytes,
+            "n_dots": st.n_dots, "n_collectives": st.n_collectives,
+            "wire_by_kind": st.by_kind, "loop_trips": st.loop_trips,
+            "raw_cost_analysis": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+        },
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+            "model_flops_per_device": useful,
+            "useful_flops_ratio": useful / flops if flops else None,
+        },
+        "hbm_analytic": {
+            "param_bytes_per_dev": params_per_dev * 2.0,
+            "opt_bytes_per_dev": (params_per_dev * 8.0
+                                  if spec.kind == "train" else 0.0),
+            "fits_16g": bool(params_per_dev * (10.0 if spec.kind == "train"
+                                               else 2.0) < 16e9),
+        },
+    }
+    return record
+
+
+def save(record: dict, out_dir: Path = RESULTS_DIR) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"_{record['tag']}" if record.get("tag") else ""
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}{tag}.json"
+    path = out_dir / name.replace("/", "_")
+    path.write_text(json.dumps(record, indent=2))
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--moe-shard", default=None)
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--kv-cache", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = args.arch or (configs_mod.ARCHS if args.all else [])
+    shapes = args.shape or (list(SHAPES) if args.all else [])
+    if not archs or not shapes:
+        ap.error("need --arch/--shape or --all")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                tag = f"_{args.tag}" if args.tag else ""
+                out = RESULTS_DIR / (f"{arch}__{shape}__{mesh_name}{tag}"
+                                     ".json")
+                if args.skip_existing and out.exists():
+                    print(f"[skip] {out.name}")
+                    continue
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape, mesh_name,
+                                     remat=args.remat,
+                                     moe_shard=args.moe_shard,
+                                     attn_impl=args.attn_impl,
+                                     kv_cache=args.kv_cache,
+                                     extra_tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "tag": args.tag, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures += 1
+                path = save(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" comp={r['compute_s']:.3e}s"
+                             f" mem={r['memory_s']:.3e}s"
+                             f" coll={r['collective_s']:.3e}s"
+                             f" useful={r['useful_flops_ratio']:.2f}")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status}] {arch} x {shape} x {mesh_name} "
+                      f"({time.time()-t0:.0f}s){extra}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,167 @@
+"""Serving driver: the paper's full loop (Fig. 2) end to end.
+
+Modes:
+  --mode search    Camel vs. grid configuration search on the calibrated
+                   Jetson landscapes (paper Results 1)
+  --mode validate  event-driven serving of N requests at the found optimal
+                   vs. the three default corners (paper Results 2)
+  --mode engine    Camel drives the *real* JAX engine (smoke model) —
+                   the arm's batch/frequency change actual batched
+                   inference calls (CPU demo of the deployment loop)
+  --mode tpu       Camel on the TPU v5e roofline-derived landscape
+                   (DESIGN.md SS3 adaptation; per --arch)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --mode search \
+        --model llama3.2-1b --rounds 49
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+import repro.configs as configs_mod
+from repro.core import arms, baselines, controller, cost, priors
+from repro.models.registry import bundle_for
+from repro.serving import energy as energy_mod
+from repro.serving import simulator as sim_mod
+from repro.serving.engine import EngineEnvironment, InferenceEngine
+from repro.serving.requests import ArrivalProcess
+
+
+def search_mode(model: str, rounds: int, alpha: float, seed: int,
+                policy_name: str = "camel") -> dict:
+    board = energy_mod.JETSON_AGX_ORIN
+    work = energy_mod.ORIN_WORKLOADS[model]
+    space = arms.paper_arm_space()
+    env = sim_mod.LandscapeEnv(board, work, noise=0.03, seed=seed)
+    cm = cost.CostModel(alpha=alpha)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+
+    if policy_name == "camel":
+        probe_tb = work.batch_time(board, board.n_levels - 1, 4)
+        mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, 4,
+                                               alpha=alpha)
+        policy = baselines.make_policy("camel", prior_mu=mu0,
+                                       prior_sigma=sig0)
+    else:
+        policy = baselines.make_policy(policy_name)
+
+    ctrl = controller.Controller(space, policy, cm, optimal_cost=opt_cost,
+                                 seed=seed)
+    res = ctrl.run(env, rounds)
+    summary = res.summary()
+    summary["optimal_knobs"] = space.values(opt_arm)
+    summary["found_optimal"] = bool(res.best_arm == opt_arm)
+    return summary
+
+
+def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
+                  ) -> dict:
+    board = energy_mod.JETSON_AGX_ORIN
+    work = energy_mod.ORIN_WORKLOADS[model]
+    space = arms.paper_arm_space()
+    env = sim_mod.LandscapeEnv(board, work, noise=0.0)
+    cm = cost.CostModel(alpha=alpha)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, _ = controller.landscape_optimal(space, env.expected, cm)
+
+    configs = {
+        "camel_optimal": space.values(opt_arm),
+        "maxf_minb": space.values(space.corner(batch="min")),
+        "maxf_maxb": space.values(space.corner()),
+        "minf_maxb": space.values(space.corner(freq_mhz="min")),
+    }
+    out = {}
+    for name, knobs in configs.items():
+        server = sim_mod.EventDrivenServer(
+            board, work, ArrivalProcess(interval_s=1.0, seed=seed),
+            n_requests, noise=0.02, seed=seed)
+        res = server.run(sim_mod.fixed_config_tuner(knobs["freq_mhz"],
+                                                    knobs["batch"]))
+        s = res.summary()
+        s["knobs"] = knobs
+        s["cost"] = float(cm.cost(s["energy_per_req"], s["latency_per_req"]))
+        out[name] = s
+    base = out["maxf_maxb"]["edp"]
+    for name in configs:
+        out[name]["edp_vs_maxf_maxb"] = 1.0 - out[name]["edp"] / base
+    return out
+
+
+def engine_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
+    cfg = configs_mod.get_smoke(arch)
+    bundle = bundle_for(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(seed))
+    engine = InferenceEngine(bundle, params, max_batch=28, max_seq_len=128)
+    board = energy_mod.JETSON_AGX_ORIN
+    work = energy_mod.ORIN_WORKLOADS["llama3.2-1b"]
+    env = EngineEnvironment(engine, board, work, prompt_len=16,
+                            max_new_tokens=8, seed=seed)
+    space = arms.paper_arm_space()
+    cm = cost.CostModel(alpha=alpha)
+    e0, l0 = env.pull(space.values(space.corner()), 0)
+    cm = cm.with_reference(e0, l0)
+    policy = baselines.make_policy("camel", prior_mu=1.0, prior_sigma=0.1)
+    ctrl = controller.Controller(space, policy, cm, seed=seed)
+    res = ctrl.run(env, rounds)
+    return res.summary()
+
+
+def tpu_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
+    cfg = configs_mod.get(arch)
+    bundle = bundle_for(cfg)
+    kv_bytes = 2.0 * 2 * getattr(cfg, "n_kv_heads", 8) \
+        * getattr(cfg, "head_dim", 128) * getattr(cfg, "n_layers", 32)
+    model = energy_mod.tpu_workload_from_config(
+        arch, bundle.n_params, bundle.n_active_params, kv_bytes,
+        model_shards=16)
+    chip = energy_mod.TPUChip()
+    env = sim_mod.TPULandscapeEnv(chip, model, noise=0.03, seed=seed)
+    space = arms.tpu_arm_space()
+    cm = cost.CostModel(alpha=alpha)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+    policy = baselines.make_policy("camel", prior_mu=1.0, prior_sigma=0.1)
+    ctrl = controller.Controller(space, policy, cm, optimal_cost=opt_cost,
+                                 seed=seed)
+    res = ctrl.run(env, rounds)
+    out = res.summary()
+    out["optimal_knobs"] = space.values(opt_arm)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["search", "validate", "engine",
+                                       "tpu"], default="search")
+    ap.add_argument("--model", default="llama3.2-1b")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--rounds", type=int, default=49)
+    ap.add_argument("--requests", type=int, default=2500)
+    ap.add_argument("--alpha", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mode == "search":
+        out = search_mode(args.model, args.rounds, args.alpha, args.seed)
+    elif args.mode == "validate":
+        out = validate_mode(args.model, args.requests, args.alpha,
+                            args.seed)
+    elif args.mode == "engine":
+        out = engine_mode(args.arch, args.rounds, args.alpha, args.seed)
+    else:
+        out = tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

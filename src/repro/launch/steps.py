@@ -1,0 +1,61 @@
+"""Step functions lowered by the dry-run / executed by train.py & serve.py.
+
+    train_step  : (params, opt_state, batch) -> (params, opt_state, metrics)
+    prefill_step: (params, inputs)           -> (logits, cache)
+    serve_step  : (params, cache, token, pos)-> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+from repro.training import optimizer as opt_mod
+from repro.training.optimizer import AdamWConfig
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,
+                    compress_grads: Optional[Callable] = None):
+    """Fused fwd+bwd+AdamW step.  `compress_grads(tree)->tree` optionally
+    wraps gradients (int8 cross-pod compression, training/compression.py)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: bundle.loss_fn(p, batch))(params)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        params, opt_state, metrics = opt_mod.apply(opt_cfg, params, grads,
+                                                   opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle, cache_len: int):
+    """Prompt -> (last-token logits, filled cache)."""
+
+    def prefill_step(params, **inputs):
+        if bundle.family == "encdec":
+            batch = inputs["tokens"].shape[0]
+            cache = bundle.init_cache(batch, cache_len)
+            return bundle.prefill(params, inputs, cache)
+        tokens = inputs.pop("tokens")
+        batch = tokens.shape[0]
+        cache = bundle.init_cache(batch, cache_len)
+        return bundle.prefill(params, tokens, cache, **inputs)
+
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle):
+    """One decode token for the whole batch against an existing cache."""
+
+    def serve_step(params, cache, token, pos):
+        return bundle.decode_step(params, token, cache, pos)
+
+    return serve_step

@@ -1,0 +1,3 @@
+"""Model substrate: shared layers + the four model families."""
+
+from repro.models import common, encdec, frontends, moe, registry, rglru, rwkv6, transformer  # noqa: F401

@@ -1,0 +1,302 @@
+"""Encoder-decoder transformer (SeamlessM4T-large-v2 text/speech backbone,
+arXiv:2308.11596).
+
+The modality frontend is a stub per the assignment: `speech_embeddings`
+(precomputed conformer-frame embeddings, [B, T_frames, D]) feed the encoder
+directly.  The decoder is a standard pre-LN causal transformer with
+cross-attention into the encoder memory.
+
+serve_step semantics for the decode shapes: the encoder memory is computed
+once per request batch (capped at `max_source_len` frames); decode steps
+carry (self KV cache, static cross KV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import AttnSpec
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    act: str = "relu"
+    max_source_len: int = 4096
+    max_target_len: int = 4096
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = True
+    remat: str = "none"
+
+    def attn_spec(self) -> AttnSpec:
+        return AttnSpec(d_model=self.d_model, n_heads=self.n_heads,
+                        n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+                        use_bias=True, use_rope=False)
+
+    @property
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * hd + 2 * d * kvh * hd + h * hd * d + 2 * h * hd \
+            + 2 * kvh * hd + d
+        mlp = 2 * d * f + f + d
+        enc = self.n_enc_layers * (attn + mlp + 4 * d)
+        dec = self.n_dec_layers * (2 * attn + mlp + 6 * d)
+        return enc + dec + v * d * (1 if self.tie_embeddings else 2)
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(cfg: EncDecConfig, key: Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "norm_mlp": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "attn": common.attn_init(k1, cfg.attn_spec(), cfg.dtype),
+        "mlp": common.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_layer_init(cfg: EncDecConfig, key: Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm_self": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "norm_cross": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "norm_mlp": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "self_attn": common.attn_init(k1, cfg.attn_spec(), cfg.dtype),
+        "cross_attn": common.attn_init(k2, cfg.attn_spec(), cfg.dtype),
+        "mlp": common.mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init_params(cfg: EncDecConfig, key: Array) -> Params:
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_dec_layers)
+    return {
+        "embedding": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                       cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(cfg, k))(dec_keys),
+        "enc_final_norm": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "dec_final_norm": common.layernorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+def abstract_params(cfg: EncDecConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (decoder queries over encoder memory)
+# ---------------------------------------------------------------------------
+
+def _cross_attention(params: Params, spec: AttnSpec, x: Array,
+                     memory_kv: Tuple[Array, Array],
+                     memory_mask: Optional[Array]) -> Array:
+    b, s, _ = x.shape
+    h, hd = spec.n_heads, spec.head_dim
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(b, s, h, hd)
+    k, v = memory_kv
+    ctx = common.mha_attend(q, k, v, memory_mask, spec)
+    return common.attn_out(params, spec, ctx)
+
+
+def _memory_kv(params: Params, spec: AttnSpec, memory: Array,
+               ) -> Tuple[Array, Array]:
+    b, t, _ = memory.shape
+    kvh, hd = spec.n_kv_heads, spec.head_dim
+    k = jnp.einsum("btd,df->btf", memory, params["wk"])
+    v = jnp.einsum("btd,df->btf", memory, params["wv"])
+    if "bk" in params:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return k.reshape(b, t, kvh, hd), v.reshape(b, t, kvh, hd)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(cfg: EncDecConfig, params: Params, speech_embeddings: Array,
+           ) -> Array:
+    """speech_embeddings: [B, T, D] (frontend stub).  Bidirectional."""
+    spec = cfg.attn_spec()
+    x = speech_embeddings.astype(cfg.dtype)
+    t = x.shape[1]
+    pos_table = common.sinusoidal_positions(t, cfg.d_model)
+    x = x + pos_table[None].astype(x.dtype)
+    positions = None  # no RoPE
+    mask = jnp.ones((1, t, t), bool)
+
+    def body(xc, lp):
+        h = common.layernorm(lp["norm_attn"], xc)
+        a = common.self_attention(lp["attn"], spec, h, positions, mask)
+        xc = xc + a
+        h = common.layernorm(lp["norm_mlp"], xc)
+        xc = xc + common.mlp(lp["mlp"], h, cfg.act)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return common.layernorm(params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (train: full teacher forcing; serve: cached)
+# ---------------------------------------------------------------------------
+
+def decode_train(cfg: EncDecConfig, params: Params, memory: Array,
+                 tokens: Array) -> Array:
+    spec = cfg.attn_spec()
+    b, s = tokens.shape
+    x = common.embed(params, tokens)
+    x = x + common.sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+    cmask = common.causal_mask(s, s)
+
+    def body(xc, lp):
+        h = common.layernorm(lp["norm_self"], xc)
+        a = common.self_attention(lp["self_attn"], spec, h, None, cmask)
+        xc = xc + a
+        h = common.layernorm(lp["norm_cross"], xc)
+        kv = _memory_kv(lp["cross_attn"], spec, memory)
+        xc = xc + _cross_attention(lp["cross_attn"], spec, h, kv, None)
+        h = common.layernorm(lp["norm_mlp"], xc)
+        xc = xc + common.mlp(lp["mlp"], h, cfg.act)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = common.layernorm(params["dec_final_norm"], x)
+    return common.unembed(params, x, cfg.tie_embeddings)
+
+
+def forward(cfg: EncDecConfig, params: Params, batch_inputs,
+            prefix_embeddings: Optional[Array] = None) -> Tuple[Array, Array]:
+    """batch_inputs: dict with 'speech_embeddings' and 'tokens'."""
+    if isinstance(batch_inputs, dict):
+        speech = batch_inputs["speech_embeddings"]
+        tokens = batch_inputs["tokens"]
+    else:  # (speech, tokens) tuple
+        speech, tokens = batch_inputs
+    memory = encode(cfg, params, speech)
+    logits = decode_train(cfg, params, memory, tokens)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: EncDecConfig, params: Params, batch: Dict[str, Array],
+            ) -> Array:
+    logits, aux = forward(cfg, params, batch)
+    return common.cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: EncDecConfig, batch: int, max_len: int) -> Params:
+    """Self-attn KV cache (decoder) + cross KV (filled at prefill)."""
+    tl = min(max_len, cfg.max_target_len)
+    sl = min(max_len, cfg.max_source_len)
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_dec_layers
+    return {
+        "self": {"k": jnp.zeros((L, batch, tl, kvh, hd), cfg.dtype),
+                 "v": jnp.zeros((L, batch, tl, kvh, hd), cfg.dtype)},
+        "cross": {"k": jnp.zeros((L, batch, sl, kvh, hd), cfg.dtype),
+                  "v": jnp.zeros((L, batch, sl, kvh, hd), cfg.dtype)},
+        "memory_len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: EncDecConfig, params: Params, inputs, cache: Params,
+            prefix_embeddings: Optional[Array] = None,
+            ) -> Tuple[Array, Params]:
+    """Encode speech + start decoding with a BOS token (tokens[:, :1])."""
+    if isinstance(inputs, dict):
+        speech = inputs["speech_embeddings"]
+        tokens = inputs["tokens"]
+    else:
+        speech, tokens = inputs
+    memory = encode(cfg, params, speech)
+    spec = cfg.attn_spec()
+
+    def fill(lp):
+        return _memory_kv(lp["cross_attn"], spec, memory)
+
+    ks, vs = jax.vmap(fill)(params["dec_layers"])
+    t = memory.shape[1]
+    cross_k = jax.lax.dynamic_update_slice(
+        cache["cross"]["k"], ks.astype(cache["cross"]["k"].dtype),
+        (0, 0, 0, 0, 0))
+    cross_v = jax.lax.dynamic_update_slice(
+        cache["cross"]["v"], vs.astype(cache["cross"]["v"].dtype),
+        (0, 0, 0, 0, 0))
+    cache = {**cache, "cross": {"k": cross_k, "v": cross_v},
+             "memory_len": jnp.asarray(t, jnp.int32)}
+    # Feed BOS (first target token) through one decode step.
+    logits, cache = decode_step(cfg, params, tokens[:, 0], cache,
+                                jnp.asarray(0, jnp.int32))
+    return logits, cache
+
+
+def decode_step(cfg: EncDecConfig, params: Params, token: Array,
+                cache: Params, pos: Array) -> Tuple[Array, Params]:
+    spec = cfg.attn_spec()
+    b = token.shape[0]
+    x = common.embed(params, token[:, None])
+    tl = cache["self"]["k"].shape[2]
+    sl = cache["cross"]["k"].shape[2]
+    pos_emb = common.sinusoidal_positions(cfg.max_target_len, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_emb, pos, 1)[None].astype(
+        x.dtype)
+
+    mem_len = cache["memory_len"]
+    cross_mask = (jnp.arange(sl)[None, None, :] < mem_len)
+    cross_mask = jnp.broadcast_to(cross_mask, (b, 1, sl))
+
+    def body(xc, layer):
+        lp, ck, cv, xk, xv = layer
+        h = common.layernorm(lp["norm_self"], xc)
+        a, nc = common.cached_attention(lp["self_attn"], spec, h,
+                                        {"k": ck, "v": cv}, pos)
+        xc = xc + a
+        h = common.layernorm(lp["norm_cross"], xc)
+        xc = xc + _cross_attention(lp["cross_attn"], spec, h, (xk, xv),
+                                   cross_mask)
+        h = common.layernorm(lp["norm_mlp"], xc)
+        xc = xc + common.mlp(lp["mlp"], h, cfg.act)
+        return xc, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"]["k"],
+                  cache["self"]["v"], cache["cross"]["k"],
+                  cache["cross"]["v"]))
+    cache = {**cache, "self": {"k": nk, "v": nv}}
+    x = common.layernorm(params["dec_final_norm"], x)
+    logits = common.unembed(params, x, cfg.tie_embeddings)
+    return logits[:, 0], cache

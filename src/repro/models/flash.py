@@ -1,0 +1,104 @@
+"""Blocked (flash) attention in pure JAX: scan over KV blocks with online
+softmax, so only block-sized score tensors ever materialize.
+
+This is the algorithmic reference for kernels/flash_attention (which adds
+explicit VMEM BlockSpec tiling for TPU); in the dry-run it is also what the
+`attn_impl="flash"` configs lower, giving the fused memory profile XLA
+cannot reach from the naive einsum formulation (no S x S intermediate).
+
+Supports: causal masking, sliding window, logit soft-cap, GQA (shared KV
+heads), query offset (chunked prefill).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import AttnSpec
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
+                    q_offset: int = 0, causal: bool = True,
+                    block_kv: int = 512,
+                    window: Optional[Array] = None) -> Array:
+    """q: [B,Sq,H,D], k/v: [B,Sk,KVH,D] -> [B,Sq,H*D].
+
+    Online-softmax over KV blocks (fp32 accumulators).  Blocks that are
+    entirely masked (beyond the causal frontier or outside the sliding
+    window) still execute under lax.scan but contribute zeros; XLA's
+    loop-invariant hoisting keeps them cheap, and the Pallas kernel skips
+    them outright via its grid.
+    """
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = spec.query_scale if spec.query_scale is not None \
+        else 1.0 / math.sqrt(hd)
+
+    blk = min(block_kv, sk)
+    if sk % blk:
+        pad = blk - sk % blk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sk_p = sk + pad
+    else:
+        sk_p = sk
+    nblk = sk_p // blk
+
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, g, hd)
+    qpos = jnp.arange(sq) + q_offset                      # [Sq]
+
+    kb = k.reshape(b, nblk, blk, kvh, hd)
+    vb = v.reshape(b, nblk, blk, kvh, hd)
+    kb = jnp.moveaxis(kb, 1, 0)                           # [N,B,blk,KVH,D]
+    vb = jnp.moveaxis(vb, 1, 0)
+
+    def body(carry, inputs):
+        acc, m_run, l_run = carry                         # acc [B,KV,G,Sq,D]
+        kc, vc, blk_idx = inputs
+        kpos = blk_idx * blk + jnp.arange(blk)            # [blk]
+
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(jnp.float32))
+        if spec.logit_softcap > 0.0:
+            cap = spec.logit_softcap
+            s = cap * jnp.tanh(s / cap)
+
+        mask = kpos[None, :] < sk                         # padding
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            # dynamic per-layer window (0 = full attention)
+            w = jnp.asarray(window)
+            mask = mask & ((w <= 0) | (kpos[None, :]
+                                       > qpos[:, None] - w))
+        elif spec.sliding_window > 0:
+            mask = mask & (kpos[None, :] > qpos[:, None]
+                           - spec.sliding_window)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+
+        m_new = jnp.maximum(m_run, s.max(axis=-1))        # [B,KV,G,Sq]
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, kvh, g, sq, hd), jnp.float32)
+    m0 = jnp.full((b, kvh, g, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    (acc, m_run, l_run), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (kb, vb, jnp.arange(nblk)))
+
+    out = acc / jnp.maximum(l_run[..., None], 1e-30)      # [B,KV,G,Sq,D]
+    out = jnp.moveaxis(out, 3, 1)                         # [B,Sq,KV,G,D]
+    return out.reshape(b, sq, h * hd).astype(q.dtype)

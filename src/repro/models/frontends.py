@@ -1,0 +1,48 @@
+"""Modality frontend stubs.
+
+Per the assignment, `[vlm]`/`[audio]` architectures specify the transformer
+BACKBONE only; the modality frontend is a STUB whose outputs —
+patch/frame embeddings — arrive as precomputed inputs via `input_specs()`.
+
+These helpers define the stub shapes and generate synthetic embeddings for
+smoke tests / examples.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStub:
+    """CLIP-style patch embedding stub (phi-3-vision)."""
+
+    num_patches: int = 576          # 336px / 14 -> 24x24 patches
+    d_model: int = 3072
+
+    def shape(self, batch: int) -> Tuple[int, int, int]:
+        return (batch, self.num_patches, self.d_model)
+
+    def synth(self, key: jax.Array, batch: int, dtype=jnp.bfloat16):
+        return (0.02 * jax.random.normal(
+            key, self.shape(batch), jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioStub:
+    """Speech frame-embedding stub (seamless conformer frontend output;
+    ~1 frame / 40 ms after subsampling)."""
+
+    num_frames: int = 512
+    d_model: int = 1024
+
+    def shape(self, batch: int) -> Tuple[int, int, int]:
+        return (batch, self.num_frames, self.d_model)
+
+    def synth(self, key: jax.Array, batch: int, dtype=jnp.bfloat16):
+        return (0.02 * jax.random.normal(
+            key, self.shape(batch), jnp.float32)).astype(dtype)

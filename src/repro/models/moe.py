@@ -1,0 +1,215 @@
+"""Token-choice top-k Mixture-of-Experts FFN (Mixtral / OLMoE style).
+
+TPU-native formulation: tokens are argsort-grouped by expert and processed
+with a grouped einsum over a fixed per-expert capacity, so compute is
+top_k/E of the dense-all-experts cost and every shape is static (GShard-style
+capacity with token dropping; dropped tokens pass through the residual).
+
+Sharding: expert tensors are (E, d_model, d_ff).  Two layouts are supported
+by distributed/sharding.py: "expert" (E over the model axis — expert
+parallelism) and "ffn" (d_ff over the model axis — tensor parallelism within
+every expert; right when E < mesh model size, e.g. Mixtral's 8 experts on 16
+shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    router_aux_coef: float = 0.01  # Switch/OLMoE load-balance loss
+    shard_mode: str = "expert"     # "expert" | "ffn"  (see module doc)
+
+    def capacity(self, n_tokens: int) -> int:
+        cap = int(math.ceil(self.capacity_factor * n_tokens * self.top_k
+                            / self.n_experts))
+        return max(cap, self.top_k)
+
+
+def moe_init(key: Array, d_model: int, cfg: MoEConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff
+    scale = 1.0 / math.sqrt(d_model)
+    fscale = 1.0 / math.sqrt(f)
+
+    def edf(k, shape, s):
+        return (s * jax.random.truncated_normal(
+            k, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+    return {
+        "router": common.dense_init(ks[0], d_model, e, jnp.float32),
+        "w_gate": edf(ks[1], (e, d_model, f), scale),
+        "w_up": edf(ks[2], (e, d_model, f), scale),
+        "w_down": edf(ks[3], (e, f, d_model), fscale),
+    }
+
+
+def moe_apply(params: Params, cfg: MoEConfig, x: Array,
+              ) -> Tuple[Array, Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar fp32).
+
+    Per-sequence grouped-capacity dispatch: routing, argsort and the
+    scatter/gather stay *local to each batch row*, so under the production
+    mesh the data axis shards every dispatch op and the expert GEMMs carry
+    (batch over data) x (experts or d_ff over model) — no cross-shard sort.
+
+      1. router softmax (fp32), top-k experts per token
+      2. per-row argsort of (token, k) pairs by expert id
+      3. scatter into a [B, E, C, D] buffer (C = per-row capacity)
+      4. grouped expert GEMMs (becd, edf -> becf)
+      5. gather back with combine weights; sum over k
+
+    Dropped tokens (over capacity) pass through the residual unchanged.
+    """
+    from repro.distributed import autoshard
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    if s == 1:
+        # Decode: per-sequence capacity would compute all E experts per
+        # token (E/top_k x waste).  Group the whole batch instead.
+        return _moe_apply_flat(params, cfg, x)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = cfg.capacity(s)
+    nk = s * k
+
+    xf = x                                                        # [B,S,D]
+    logits = jnp.einsum("bsd,de->bse", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [B,S,E]
+    topv, topi = jax.lax.top_k(probs, k)                         # [B,S,K]
+    topv = topv / jnp.maximum(topv.sum(axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch eq. 4): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                                 # [E]
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (b * nk))
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    # --- dispatch (per batch row) ------------------------------------------
+    flat_expert = topi.reshape(b, nk)                            # [B,NK]
+    flat_weight = topv.reshape(b, nk)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(s), k)[None], (b, nk))
+
+    order = jnp.argsort(flat_expert, axis=1)                     # stable
+    sexp = jnp.take_along_axis(flat_expert, order, axis=1)
+    stok = jnp.take_along_axis(flat_token, order, axis=1)
+    swei = jnp.take_along_axis(flat_weight, order, axis=1)
+
+    group_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(sexp)
+    pos_in_group = jnp.arange(nk)[None] - jnp.take_along_axis(
+        group_start, sexp, axis=1)
+    valid = pos_in_group < cap
+    slot = sexp * cap + jnp.minimum(pos_in_group, cap - 1)       # [B,NK]
+
+    gathered = jnp.take_along_axis(
+        xf, stok[..., None], axis=1)                             # [B,NK,D]
+    gathered = jnp.where(valid[..., None], gathered, 0)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = jax.vmap(lambda bu, sl, g: bu.at[sl].add(g))(buf, slot, gathered)
+    buf = buf.reshape(b, e, cap, d)
+
+    moe_ax = autoshard.MODEL_AXIS if cfg.shard_mode == "expert" else None
+    ffn_ax = autoshard.MODEL_AXIS if cfg.shard_mode == "ffn" else None
+    axes = autoshard.ambient_axes() or {}
+    da = autoshard.data_axes(axes) or None
+    if axes:
+        buf = autoshard.constrain(buf, P(da, moe_ax, None, None))
+
+    # --- expert GEMMs -----------------------------------------------------
+    g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    if axes:
+        g = autoshard.constrain(g, P(da, moe_ax, None, ffn_ax))
+        u = autoshard.constrain(u, P(da, moe_ax, None, ffn_ax))
+    h = common.ACTS[cfg.act](g) * u
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"])        # [B,E,C,D]
+    if axes:
+        y = autoshard.constrain(y, P(da, moe_ax, None, None))
+
+    # --- combine ----------------------------------------------------------
+    yflat = y.reshape(b, e * cap, d)
+    per_pair = jnp.take_along_axis(yflat, slot[..., None], axis=1)
+    per_pair = per_pair * (swei * valid)[..., None].astype(x.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    out = jax.vmap(lambda o, t, p: o.at[t].add(p))(out, stok, per_pair)
+    return out, aux
+
+
+def _moe_apply_flat(params: Params, cfg: MoEConfig, x: Array,
+                    ) -> Tuple[Array, Array]:
+    """Batch-grouped dispatch for decode (S == 1): one (token, k) pool over
+    the whole batch; capacity = ceil(cf * B * k / E)."""
+    from repro.distributed import autoshard
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    cap = cfg.capacity(n)
+
+    xf = x.reshape(n, d)
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.maximum(topv.sum(axis=-1, keepdims=True), 1e-9)
+
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0 / (n * k))
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    flat_expert = topi.reshape(-1)
+    flat_weight = topv.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_expert)
+    sexp = flat_expert[order]
+    stok = flat_token[order]
+    swei = flat_weight[order]
+    group_start = jnp.searchsorted(sexp, jnp.arange(e), side="left")
+    pos = jnp.arange(n * k) - group_start[sexp]
+    valid = pos < cap
+    slot = sexp * cap + jnp.minimum(pos, cap - 1)
+
+    gathered = jnp.where(valid[:, None], xf[stok], 0)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].add(gathered)
+    buf = buf.reshape(e, cap, d)
+
+    moe_ax = autoshard.MODEL_AXIS if cfg.shard_mode == "expert" else None
+    ffn_ax = autoshard.MODEL_AXIS if cfg.shard_mode == "ffn" else None
+    axes = autoshard.ambient_axes() or {}
+    if axes:
+        buf = autoshard.constrain(buf, P(moe_ax, None, None))
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    if axes:
+        g = autoshard.constrain(g, P(moe_ax, None, ffn_ax))
+        u = autoshard.constrain(u, P(moe_ax, None, ffn_ax))
+    h = common.ACTS[cfg.act](g) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    if axes:
+        y = autoshard.constrain(y, P(moe_ax, None, None))
+
+    yflat = y.reshape(e * cap, d)
+    per_pair = yflat[slot] * (swei * valid)[:, None].astype(x.dtype)
+    out = jnp.zeros((n, d), x.dtype).at[stok].add(per_pair)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,80 @@
+"""Uniform model API over the four model families.
+
+A `ModelBundle` exposes the family-agnostic surface the launcher, serving
+engine, dry-run and tests consume:
+
+    bundle.init_params(key)      bundle.abstract_params()
+    bundle.loss_fn(params, batch)
+    bundle.forward(params, ...)  -> (logits, aux)
+    bundle.init_cache(batch, max_len)
+    bundle.prefill(params, inputs, cache) -> (logits, cache)
+    bundle.decode_step(params, token, cache, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+from repro.models import encdec, rglru, rwkv6, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    family: str            # "transformer" | "rwkv6" | "rglru" | "encdec"
+    module: Any
+
+    def init_params(self, key):
+        return self.module.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return self.module.abstract_params(self.cfg)
+
+    def loss_fn(self, params, batch):
+        return self.module.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params, inputs, **kw):
+        return self.module.forward(self.cfg, params, inputs, **kw)
+
+    def init_cache(self, batch, max_len):
+        return self.module.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params, inputs, cache, **kw):
+        return self.module.prefill(self.cfg, params, inputs, cache, **kw)
+
+    def decode_step(self, params, token, cache, pos):
+        return self.module.decode_step(self.cfg, params, token, cache, pos)
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+    @property
+    def n_params(self) -> int:
+        return self.cfg.n_params
+
+    @property
+    def n_active_params(self) -> int:
+        return self.cfg.n_active_params
+
+
+_FAMILY_MODULES = {
+    "transformer": transformer,
+    "rwkv6": rwkv6,
+    "rglru": rglru,
+    "encdec": encdec,
+}
+
+_FAMILY_OF_CONFIG = {
+    transformer.TransformerConfig: "transformer",
+    rwkv6.RWKV6Config: "rwkv6",
+    rglru.RGLRUConfig: "rglru",
+    encdec.EncDecConfig: "encdec",
+}
+
+
+def bundle_for(cfg) -> ModelBundle:
+    family = _FAMILY_OF_CONFIG[type(cfg)]
+    return ModelBundle(cfg=cfg, family=family,
+                       module=_FAMILY_MODULES[family])

@@ -1,0 +1,407 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay.
+
+Time mixing (per head h, head dim N):
+    S_t   = diag(w_t) . S_{t-1} + k_t v_t^T          (state: N x N)
+    y_t   = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+with w_t = exp(-exp(logit_w(x_t))) in (0,1) data-dependent per channel, and
+u ("bonus") learned.  r/k/v/g/w inputs use data-dependent token-shift lerps
+(ddlerp) with a small LoRA.  Output: per-head GroupNorm, gated by silu(g).
+
+Channel mixing: k = relu(Wk xk)^2; out = sigmoid(Wr xr) * (Wv k).
+
+Training/prefill use a *chunked* parallel form (the same blocked algorithm
+the Pallas kernel kernels/rwkv6 implements): within a chunk of length C the
+contribution is a masked (C x C) matmul in log-decay space; across chunks the
+N x N state is carried.  Decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    name: str
+    n_layers: int
+    d_model: int
+    head_dim: int          # N; n_heads = d_model // head_dim
+    d_ff: int
+    vocab_size: int
+    lora_rank_decay: int = 64
+    lora_rank_mix: int = 32
+    chunk: int = 32
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+    remat: str = "none"
+    max_seq_len: int = 1 << 20   # state is O(1); no positional table
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        rd, rm = self.lora_rank_decay, self.lora_rank_mix
+        tm = (5 * d * d            # wr wk wv wg wo
+              + 2 * d * 5 * rm     # maa LoRA
+              + 2 * d * rd         # decay LoRA
+              + d                  # bonus
+              + 9 * d)             # maa vectors + decay_base + ln_x
+        cm = 2 * d * f + d * d
+        per_layer = tm + cm + 4 * d
+        return self.n_layers * per_layer + v * d * (
+            1 if self.tie_embeddings else 2)
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _time_mix_init(cfg: RWKV6Config, key: Array) -> Params:
+    d = cfg.d_model
+    h, n = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 10)
+    dt = cfg.dtype
+    rm, rd = cfg.lora_rank_mix, cfg.lora_rank_decay
+    return {
+        "maa_x": jnp.zeros((d,), dt),
+        "maa_rkvwg": jnp.zeros((5, d), dt),       # base lerp weights
+        "maa_w1": common.dense_init(ks[0], d, 5 * rm, dt),
+        "maa_w2": (0.01 * jax.random.normal(
+            ks[1], (5, rm, d), jnp.float32)).astype(dt),
+        "decay_base": jnp.zeros((d,), dt),        # logit of log-decay
+        "decay_w1": common.dense_init(ks[2], d, rd, dt),
+        "decay_w2": (0.01 * jax.random.normal(
+            ks[3], (rd, d), jnp.float32)).astype(dt),
+        "bonus": jnp.zeros((h, n), dt),           # u (time_faaaa)
+        "wr": common.dense_init(ks[4], d, d, dt),
+        "wk": common.dense_init(ks[5], d, d, dt),
+        "wv": common.dense_init(ks[6], d, d, dt),
+        "wg": common.dense_init(ks[7], d, d, dt),
+        "wo": common.dense_init(ks[8], d, d, dt),
+        "ln_x": common.layernorm_init(d, dt),     # per-head GroupNorm
+    }
+
+
+def _channel_mix_init(cfg: RWKV6Config, key: Array) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {
+        "maa_k": jnp.zeros((d,), dt),
+        "maa_r": jnp.zeros((d,), dt),
+        "wk": common.dense_init(ks[0], d, f, dt),
+        "wv": common.dense_init(ks[1], f, d, dt),
+        "wr": common.dense_init(ks[2], d, d, dt),
+    }
+
+
+def _layer_init(cfg: RWKV6Config, key: Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "ln2": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "time_mix": _time_mix_init(cfg, k1),
+        "channel_mix": _channel_mix_init(cfg, k2),
+    }
+
+
+def init_params(cfg: RWKV6Config, key: Array) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    p = {
+        "embedding": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                       cfg.dtype),
+        "ln0": common.layernorm_init(cfg.d_model, cfg.dtype),
+        "layers": layers,
+        "final_norm": common.layernorm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = common.embed_init(k_head, cfg.vocab_size,
+                                         cfg.d_model, cfg.dtype)
+    return p
+
+
+def abstract_params(cfg: RWKV6Config) -> Params:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Time mixing
+# ---------------------------------------------------------------------------
+
+def _ddlerp(tm: Params, x: Array, sx: Array) -> Tuple[Array, ...]:
+    """Data-dependent lerps for (r, k, v, w, g).  x, sx: [B, S, D]."""
+    xx = x + sx * tm["maa_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", xx, tm["maa_w1"]))
+    b, s, _ = x.shape
+    rm = tm["maa_w2"].shape[1]
+    lora = lora.reshape(b, s, 5, rm)
+    deltas = jnp.einsum("bskr,krd->kbsd", lora, tm["maa_w2"])
+    outs = []
+    for i in range(5):
+        mix = tm["maa_rkvwg"][i] + deltas[i]
+        outs.append(x + sx * mix)
+    return tuple(outs)   # xr, xk, xv, xw, xg
+
+
+def _rkvwg(tm: Params, cfg: RWKV6Config, x: Array, sx: Array):
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, sx)
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    r = jnp.einsum("bsd,de->bse", xr, tm["wr"]).reshape(b, s, h, n)
+    k = jnp.einsum("bsd,de->bse", xk, tm["wk"]).reshape(b, s, h, n)
+    v = jnp.einsum("bsd,de->bse", xv, tm["wv"]).reshape(b, s, h, n)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, tm["wg"]))
+    # log-decay (negative): w = exp(-exp(logit)) in (0,1); logw = -exp(logit).
+    lora_w = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, tm["decay_w1"])
+                      .astype(jnp.float32))
+    logit = tm["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsr,rd->bsd", lora_w, tm["decay_w2"].astype(jnp.float32))
+    logw = -jnp.exp(logit - 2.0)           # init bias toward slow decay
+    # Clamp for the chunked kernel's fp32 exponent budget (|logw|*chunk/2
+    # must stay < ~88); official RWKV6 decays live well inside this.
+    logw = jnp.clip(logw, -4.0, -1e-6)
+    logw = logw.reshape(b, s, h, n)
+    return r, k, v, logw, g
+
+
+def wkv6_chunked(r: Array, k: Array, v: Array, logw: Array, bonus: Array,
+                 state: Array, chunk: int) -> Tuple[Array, Array]:
+    """Chunked WKV6.  r/k/v: [B,S,H,N] (compute dtype), logw fp32 [B,S,H,N],
+    bonus [H,N], state fp32 [B,H,N,N] (indexed [key_dim, value_dim]).
+    Returns (y [B,S,H,N], final state)."""
+    b, s, h, n = r.shape
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    nc = s // c
+
+    rf = r.astype(jnp.float32).reshape(b, nc, c, h, n)
+    kf = k.astype(jnp.float32).reshape(b, nc, c, h, n)
+    vf = v.astype(jnp.float32).reshape(b, nc, c, h, n)
+    lw = logw.reshape(b, nc, c, h, n)
+
+    # Move chunk axis to front for scan.
+    rf, kf, vf, lw = (jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, lw))
+
+    def chunk_step(S, inputs):
+        rc, kc, vc, lwc = inputs   # [B, C, H, N] each
+        cum = jnp.cumsum(lwc, axis=1)                   # inclusive
+        cum_excl = cum - lwc                            # exclusive prefix
+        total = cum[:, -1:]                             # [B,1,H,N]
+
+        # Inter-chunk: y_i += (r_i * exp(cum_excl_i)) . S
+        r_dec = rc * jnp.exp(cum_excl)
+        y_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, S)
+
+        # Intra-chunk (strictly past within chunk):
+        #   A[i,j] = sum_n r_i[n] k_j[n] exp(cum_excl_i[n] - cum_j[n])
+        # Factored with mid-chunk renormalization so both exponents stay
+        # within the fp32 budget (|logw| clamped to 4, chunk <= 32).
+        mid = cum[:, c // 2 - 1:c // 2] if c > 1 else cum[:, :1]
+        r_n = rc * jnp.exp(cum_excl - mid)
+        k_n = kc * jnp.exp(mid - cum)
+        A = jnp.einsum("bihn,bjhn->bhij", r_n, k_n)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhij,bjhn->bihn", A, vc)
+
+        # Bonus (current token): y_i += (r_i . (u * k_i)) v_i
+        dot = jnp.einsum("bchn,bchn->bch", rc, bonus[None, None] * kc)
+        y_bonus = dot[..., None] * vc
+
+        y = y_inter + y_intra + y_bonus
+
+        # State update: S' = diag(exp(total)) S + sum_j exp(total-cum_j) k_j v_j^T
+        k_fut = kc * jnp.exp(total - cum)
+        S_new = jnp.exp(total)[:, 0, :, :, None] * S + jnp.einsum(
+            "bchn,bchm->bhnm", k_fut, vc)
+        return S_new, y
+
+    state, ys = jax.lax.scan(chunk_step, state.astype(jnp.float32),
+                             (rf, kf, vf, lw))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, n)
+    return y, state
+
+
+def wkv6_decode(r: Array, k: Array, v: Array, logw: Array, bonus: Array,
+                state: Array) -> Tuple[Array, Array]:
+    """One-token recurrence.  r/k/v/logw: [B,1,H,N]; state [B,H,N,N]."""
+    rf, kf, vf = (a.astype(jnp.float32)[:, 0] for a in (r, k, v))
+    w = jnp.exp(logw[:, 0])                                 # [B,H,N]
+    kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+    y = jnp.einsum("bhn,bhnm->bhm", rf,
+                   state + bonus[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    return y[:, None], state
+
+
+def _time_mix(tm: Params, cfg: RWKV6Config, x: Array, shift_state: Array,
+              wkv_state: Array, chunked: bool,
+              ) -> Tuple[Array, Array, Array]:
+    """x: [B,S,D]; shift_state: [B,D] (previous token input); wkv_state:
+    [B,H,N,N].  Returns (out, new_shift, new_wkv)."""
+    b, s, d = x.shape
+    h, n = cfg.n_heads, cfg.head_dim
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    sx = prev - x
+    r, k, v, logw, g = _rkvwg(tm, cfg, x, sx)
+    bonus = tm["bonus"].astype(jnp.float32)
+    if chunked:
+        y, new_state = wkv6_chunked(r, k, v, logw, bonus, wkv_state,
+                                    cfg.chunk)
+    else:
+        y, new_state = wkv6_decode(r, k, v, logw, bonus, wkv_state)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = common.layernorm(tm["ln_x"], y)      # GroupNorm over heads ~ LN here
+    y = y * g.reshape(b, s, d).astype(y.dtype)
+    out = jnp.einsum("bsd,de->bse", y, tm["wo"])
+    return out, x[:, -1], new_state
+
+
+def _channel_mix(cm: Params, x: Array, shift_state: Array,
+                 ) -> Tuple[Array, Array]:
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    sx = prev - x
+    xk = x + sx * cm["maa_k"]
+    xr = x + sx * cm["maa_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, cm["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, cm["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, cm["wr"]))
+    return r * kv, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: RWKV6Config, batch: int) -> Params:
+    """Recurrent state, stacked over layers (the 'cache')."""
+    h, n = cfg.n_heads, cfg.head_dim
+    return {
+        "tm_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), cfg.dtype),
+        "wkv": jnp.zeros((cfg.n_layers, batch, h, n, n), jnp.float32),
+    }
+
+
+# Alias so engines can treat models uniformly.
+def init_cache(cfg: RWKV6Config, batch: int, max_len: int) -> Params:
+    del max_len
+    return init_state(cfg, batch)
+
+
+def _run(cfg: RWKV6Config, params: Params, x: Array, state: Params,
+         chunked: bool) -> Tuple[Array, Params]:
+    def body(carry, layer):
+        xc = carry
+        lp, tm_shift, cm_shift, wkv = layer
+        h = common.layernorm(lp["ln1"], xc)
+        a, new_tm_shift, new_wkv = _time_mix(lp["time_mix"], cfg, h,
+                                             tm_shift, wkv, chunked)
+        xc = xc + a
+        h = common.layernorm(lp["ln2"], xc)
+        m, new_cm_shift = _channel_mix(lp["channel_mix"], h, cm_shift)
+        xc = xc + m
+        return xc, (new_tm_shift, new_cm_shift, new_wkv)
+
+    fn = body
+    if cfg.remat != "none" and chunked:
+        fn = jax.checkpoint(body)
+    x, (tm_s, cm_s, wkv) = jax.lax.scan(
+        fn, x, (params["layers"], state["tm_shift"], state["cm_shift"],
+                state["wkv"]))
+    return x, {"tm_shift": tm_s, "cm_shift": cm_s, "wkv": wkv}
+
+
+def forward(cfg: RWKV6Config, params: Params, tokens: Array,
+            prefix_embeddings: Optional[Array] = None,
+            ) -> Tuple[Array, Array]:
+    x = common.embed(params, tokens)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+    x = common.layernorm(params["ln0"], x)
+    s = x.shape[1]
+    pad = (-s) % cfg.chunk
+    if pad:
+        # Right-pad to a chunk multiple; causal recurrence means padded
+        # steps cannot affect real positions' outputs.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    state = init_state(cfg, x.shape[0])
+    x, _ = _run(cfg, params, x, state, chunked=True)
+    if pad:
+        x = x[:, :s]
+    x = common.layernorm(params["final_norm"], x)
+    if prefix_embeddings is not None:
+        x = x[:, prefix_embeddings.shape[1]:]
+    logits = common.unembed(params, x, cfg.tie_embeddings)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg: RWKV6Config, params: Params, batch: Dict[str, Array],
+            ) -> Array:
+    logits, aux = forward(cfg, params, batch["tokens"])
+    return common.cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+def prefill(cfg: RWKV6Config, params: Params, tokens: Array, cache: Params,
+            prefix_embeddings: Optional[Array] = None,
+            ) -> Tuple[Array, Params]:
+    x = common.embed(params, tokens)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+    x = common.layernorm(params["ln0"], x)
+    # Pad to chunk multiple for the chunked kernel.
+    s = x.shape[1]
+    c = cfg.chunk
+    pad = (-s) % c
+    if pad:
+        # Left-pad processing is wrong for recurrence; right-pad then trim
+        # state contributions by processing padded tail as zeros and fixing
+        # the state by masking decay/kv.  Simpler: run the tail sequentially.
+        head = (s // c) * c
+        x_head, x_tail = x[:, :head], x[:, head:]
+    else:
+        x_head, x_tail = x, None
+    state = cache
+    last = None
+    if x_head.shape[1]:
+        x_out, state = _run(cfg, params, x_head, state, chunked=True)
+        last = x_out[:, -1:]
+    if x_tail is not None:
+        for i in range(x_tail.shape[1]):
+            last, state = _run(cfg, params, x_tail[:, i:i + 1], state,
+                               chunked=False)
+    x = common.layernorm(params["final_norm"], last)
+    logits = common.unembed(params, x, cfg.tie_embeddings)
+    return logits[:, 0], state
+
+
+def decode_step(cfg: RWKV6Config, params: Params, token: Array,
+                cache: Params, pos: Array) -> Tuple[Array, Params]:
+    del pos  # stateful model: position-free
+    x = common.embed(params, token[:, None])
+    x = common.layernorm(params["ln0"], x)
+    x, state = _run(cfg, params, x, cache, chunked=False)
+    x = common.layernorm(params["final_norm"], x)
+    logits = common.unembed(params, x, cfg.tie_embeddings)
+    return logits[:, 0], state

@@ -1,0 +1,478 @@
+"""Generic decoder-only transformer LM.
+
+Covers the dense/GQA family (smollm, qwen2, starcoder2, phi-3-vision
+backbone), logit-softcap + alternating local:global attention (gemma2), and
+MoE FFNs (mixtral, olmoe) — all through one scan-over-layers body driven by
+per-layer flag vectors, so the HLO stays one-block-sized regardless of depth.
+
+Public API (used by launch/, serving/ and tests):
+    init_params(cfg, key)            -> params pytree
+    abstract_params(cfg)             -> ShapeDtypeStruct tree (no allocation)
+    forward(cfg, params, tokens, prefix_embeddings=None)    -> logits
+    loss_fn(cfg, params, batch)      -> scalar loss
+    init_cache(cfg, batch, max_len)  -> cache pytree
+    prefill(cfg, params, tokens, cache) -> (last_logits, cache)
+    decode_step(cfg, params, token, cache, pos) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import AttnSpec
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+Array = jax.Array
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    norm: str = "rmsnorm"
+    mlp_kind: str = "gated"        # "gated" (SwiGLU/GeGLU) | "dense"
+    act: str = "silu"
+    use_bias: bool = False         # bias on mlp + attn out (starcoder2)
+    qkv_bias: bool = False         # qwen2
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    attn_softcap: float = 0.0      # gemma2: 50
+    final_softcap: float = 0.0     # gemma2: 30
+    query_scale: Optional[float] = None
+    qk_norm: bool = False          # olmoe
+    embed_scale: bool = False      # gemma: sqrt(d) input scaling
+    post_norms: bool = False       # gemma2 sandwich norms
+    sliding_window: int = 0
+    layer_pattern: Tuple[str, ...] = ("global",)  # cycled over layers
+    attn_impl: str = "naive"       # "naive" | "flash"
+    kv_cache_dtype: str = "native"  # "native" (cfg.dtype) | "int8"
+    moe: Optional[MoEConfig] = None
+    num_prefix_embeddings: int = 0  # VLM/audio stub prefix slots
+    dtype: Any = jnp.bfloat16
+    max_seq_len: int = 131072
+    # remat policy for train_step: "none" | "dots" | "full"
+    remat: str = "none"
+
+    @property
+    def is_local(self) -> Tuple[bool, ...]:
+        pat = self.layer_pattern
+        return tuple(pat[i % len(pat)] == "local"
+                     for i in range(self.n_layers))
+
+    def attn_spec(self) -> AttnSpec:
+        return AttnSpec(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            use_bias=self.use_bias, qkv_bias_only=self.qkv_bias,
+            logit_softcap=self.attn_softcap, query_scale=self.query_scale,
+            rope_theta=self.rope_theta, use_rope=self.use_rope,
+            qk_norm=self.qk_norm, sliding_window=self.sliding_window,
+            attn_impl=self.attn_impl)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once if tied)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * hd + 2 * d * kvh * hd + h * hd * d
+        if self.moe is not None:
+            m = self.moe
+            ffn = d * m.n_experts + m.n_experts * (2 * d * m.d_ff
+                                                   + m.d_ff * d)
+        elif self.mlp_kind == "gated":
+            ffn = 3 * d * f
+        else:
+            ffn = 2 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+    @property
+    def n_active_params(self) -> int:
+        """Activated params per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.n_params
+        d, v = self.d_model, self.vocab_size
+        h, kvh, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * h * hd + 2 * d * kvh * hd + h * hd * d
+        m = self.moe
+        ffn = d * m.n_experts + m.top_k * (2 * d * m.d_ff + m.d_ff * d)
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: TransformerConfig, key: Array) -> Params:
+    norm_init, _ = common.make_norm(cfg.norm)
+    k_attn, k_mlp = jax.random.split(key)
+    p: Params = {
+        "norm_attn": norm_init(cfg.d_model, cfg.dtype),
+        "norm_mlp": norm_init(cfg.d_model, cfg.dtype),
+        "attn": common.attn_init(k_attn, cfg.attn_spec(), cfg.dtype),
+    }
+    if cfg.post_norms:
+        p["post_norm_attn"] = norm_init(cfg.d_model, cfg.dtype)
+        p["post_norm_mlp"] = norm_init(cfg.d_model, cfg.dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_init(k_mlp, cfg.d_model, cfg.moe, cfg.dtype)
+    elif cfg.mlp_kind == "gated":
+        p["mlp"] = common.gated_mlp_init(k_mlp, cfg.d_model, cfg.d_ff,
+                                         cfg.dtype, cfg.use_bias)
+    else:
+        p["mlp"] = common.mlp_init(k_mlp, cfg.d_model, cfg.d_ff, cfg.dtype,
+                                   cfg.use_bias)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key: Array) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    # Stacked layer params: vmap the single-layer init over keys.
+    layers = jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys)
+    norm_init, _ = common.make_norm(cfg.norm)
+    params: Params = {
+        "embedding": common.embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                       cfg.dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.embed_init(k_head, cfg.vocab_size,
+                                              cfg.d_model, cfg.dtype)
+    return params
+
+
+def abstract_params(cfg: TransformerConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _block(cfg: TransformerConfig, lp: Params, x: Array, positions: Array,
+           mask: Array, window_arr=None) -> Tuple[Array, Array]:
+    """One transformer block; returns (x, aux_loss)."""
+    _, norm = common.make_norm(cfg.norm)
+    spec = cfg.attn_spec()
+
+    h = norm(lp["norm_attn"], x)
+    a = common.self_attention(lp["attn"], spec, h, positions, mask,
+                              window_arr=window_arr)
+    if cfg.post_norms:
+        a = norm(lp["post_norm_attn"], a)
+    x = x + a
+
+    h = norm(lp["norm_mlp"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        m, aux = moe_apply(lp["moe"], cfg.moe, h)
+    elif cfg.mlp_kind == "gated":
+        m = common.gated_mlp(lp["mlp"], h, cfg.act)
+    else:
+        m = common.mlp(lp["mlp"], h, cfg.act)
+    if cfg.post_norms:
+        m = norm(lp["post_norm_mlp"], m)
+    return x + m, aux
+
+
+def _layer_masks(cfg: TransformerConfig, sq: int, sk: int,
+                 q_offset: int = 0) -> Tuple[Array, Array]:
+    """(global_mask, local_mask) [1, sq, sk]; the scan body selects by
+    per-layer flag."""
+    g = common.causal_mask(sq, sk, q_offset=q_offset, window=0)
+    l = common.causal_mask(sq, sk, q_offset=q_offset,
+                           window=cfg.sliding_window or 0)
+    return g, l
+
+
+def forward(cfg: TransformerConfig, params: Params, tokens: Array,
+            prefix_embeddings: Optional[Array] = None,
+            ) -> Tuple[Array, Array]:
+    """tokens: [B, S] int32.  prefix_embeddings: [B, P, D] modality stub
+    (prepended; logits are returned for token positions only).
+    Returns (logits [B, S, V], aux_loss)."""
+    x = common.embed(params, tokens, cfg.embed_scale)
+    p = 0
+    if prefix_embeddings is not None:
+        p = prefix_embeddings.shape[1]
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    gmask, lmask = _layer_masks(cfg, s, s)
+    is_local = jnp.asarray(cfg.is_local)
+
+    _, norm = common.make_norm(cfg.norm)
+
+    def body(carry, layer):
+        xc, aux_acc = carry
+        lp, local_flag = layer
+        mask = jnp.where(local_flag, lmask, gmask)
+        window_arr = jnp.where(local_flag, cfg.sliding_window, 0)
+        fn = _block
+        if cfg.remat in ("dots", "full"):
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if cfg.remat == "dots" else
+                      jax.checkpoint_policies.nothing_saveable)
+            fn = jax.checkpoint(_block, policy=policy, static_argnums=(0,))
+        xc, aux = fn(cfg, lp, xc, positions, mask, window_arr)
+        return (xc, aux_acc + aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["layers"], is_local))
+    x = norm(params["final_norm"], x)
+    if p:
+        x = x[:, p:]
+    logits = common.unembed(params, x, cfg.tie_embeddings, cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(cfg: TransformerConfig, params: Params, batch: Dict[str, Array],
+            ) -> Array:
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("prefix_embeddings"))
+    return common.cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache inference
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: TransformerConfig, max_len: int, layer_local: bool) -> int:
+    """Ring-buffer length for local layers; full length for global."""
+    if layer_local and cfg.sliding_window and max_len > cfg.sliding_window:
+        return cfg.sliding_window
+    return max_len
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> Params:
+    """Stacked over layers.  When local and global layers need different
+    cache lengths they are stored as two stacked groups."""
+    locals_ = cfg.is_local
+    n_local = sum(locals_)
+    n_global = cfg.n_layers - n_local
+    lw = cache_len(cfg, max_len, True)
+    gw = cache_len(cfg, max_len, False)
+    cdtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.dtype
+
+    def group(n, w):
+        one = common.kv_cache_init(batch, w, cfg.n_kv_heads, cfg.head_dim,
+                                   cdtype)
+        return jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype), one)
+
+    cache: Params = {}
+    if n_global:
+        cache["global"] = group(n_global, gw)
+    if n_local:
+        cache["local"] = group(n_local, lw)
+    return cache
+
+
+def _split_layers(cfg: TransformerConfig, layers: Params,
+                  ) -> Tuple[Params, Params, Array, Array]:
+    """Split stacked layer params into (global_stack, local_stack) plus the
+    index vectors mapping group position -> original layer index."""
+    import numpy as np
+    locals_ = np.asarray(cfg.is_local)
+    gidx = np.nonzero(~locals_)[0]
+    lidx = np.nonzero(locals_)[0]
+    g = jax.tree.map(lambda a: a[gidx], layers) if len(gidx) else None
+    l = jax.tree.map(lambda a: a[lidx], layers) if len(lidx) else None
+    return g, l, jnp.asarray(gidx), jnp.asarray(lidx)
+
+
+def _group_scan(cfg: TransformerConfig, group_params: Params, cache: Params,
+                x_per_layer_fn, ring: bool):
+    """Scan one layer group, threading x through and collecting caches.
+
+    x_per_layer_fn(lp, cache_slice, x) -> (x, new_cache_slice)
+    """
+
+    def body(x, layer):
+        lp, c = layer
+        x, new_c = x_per_layer_fn(lp, c, x)
+        return x, new_c
+
+    return body
+
+
+def _interleave(cfg: TransformerConfig, params: Params, x: Array,
+                cache: Params, step_fn) -> Tuple[Array, Params]:
+    """Run global and local groups in original layer order.
+
+    Layer order interleaving matters (activations flow through layers
+    sequentially), so we scan each *group* but must preserve order.  For
+    patterns like gemma2's strict alternation we scan over pattern units
+    instead; the generic fallback here runs groups in order of layer index
+    by scanning a merged representation.
+
+    Implementation: we process layers one scan step at a time over the full
+    depth, selecting the right group slice per step via gather — params for
+    both groups are passed; the flag picks which branch executes.  To keep
+    memory bounded we rely on both branches having identical shapes, which
+    holds because local/global layers share parameter shapes (only cache
+    lengths differ).
+    """
+    g_params, l_params, gidx, lidx = _split_layers(cfg, params["layers"])
+    new_cache: Params = {}
+    # Scan global group first if pattern is all-global (fast path).
+    if l_params is None:
+        def body(x, layer):
+            lp, c = layer
+            x, nc = step_fn(lp, c, x, False)
+            return x, nc
+        x, nc = jax.lax.scan(body, x, (g_params, cache["global"]))
+        new_cache["global"] = nc
+        return x, new_cache
+    if g_params is None:
+        def body(x, layer):
+            lp, c = layer
+            x, nc = step_fn(lp, c, x, True)
+            return x, nc
+        x, nc = jax.lax.scan(body, x, (l_params, cache["local"]))
+        new_cache["local"] = nc
+        return x, new_cache
+
+    # Mixed pattern: scan over repeating pattern units (e.g. gemma2's
+    # (local, global) pair).  Requires the pattern to tile n_layers.
+    pat = cfg.layer_pattern
+    n_units = cfg.n_layers // len(pat)
+    assert n_units * len(pat) == cfg.n_layers, (
+        "mixed local/global patterns must tile n_layers exactly")
+    per_unit_local = [p == "local" for p in pat]
+    n_loc_u = sum(per_unit_local)
+    n_glob_u = len(pat) - n_loc_u
+
+    # Reshape stacked groups to (units, per-unit, ...).
+    g_u = jax.tree.map(
+        lambda a: a.reshape(n_units, n_glob_u, *a.shape[1:]), g_params)
+    l_u = jax.tree.map(
+        lambda a: a.reshape(n_units, n_loc_u, *a.shape[1:]), l_params)
+    gc_u = jax.tree.map(
+        lambda a: a.reshape(n_units, n_glob_u, *a.shape[1:]),
+        cache["global"])
+    lc_u = jax.tree.map(
+        lambda a: a.reshape(n_units, n_loc_u, *a.shape[1:]), cache["local"])
+
+    def unit_body(x, unit):
+        gu, lu, gcu, lcu = unit
+        ncs_g, ncs_l = [], []
+        gi = li = 0
+        for is_loc in per_unit_local:
+            if is_loc:
+                lp = jax.tree.map(lambda a: a[li], lu)
+                c = jax.tree.map(lambda a: a[li], lcu)
+                x, nc = step_fn(lp, c, x, True)
+                ncs_l.append(nc)
+                li += 1
+            else:
+                lp = jax.tree.map(lambda a: a[gi], gu)
+                c = jax.tree.map(lambda a: a[gi], gcu)
+                x, nc = step_fn(lp, c, x, False)
+                ncs_g.append(nc)
+                gi += 1
+        stack = lambda cs: jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *cs)
+        return x, (stack(ncs_g) if ncs_g else None,
+                   stack(ncs_l) if ncs_l else None)
+
+    x, (ncg, ncl) = jax.lax.scan(unit_body, x, (g_u, l_u, gc_u, lc_u))
+    new_cache["global"] = jax.tree.map(
+        lambda a: a.reshape(n_units * n_glob_u, *a.shape[2:]), ncg)
+    new_cache["local"] = jax.tree.map(
+        lambda a: a.reshape(n_units * n_loc_u, *a.shape[2:]), ncl)
+    return x, new_cache
+
+
+def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
+            cache: Params, prefix_embeddings: Optional[Array] = None,
+            ) -> Tuple[Array, Params]:
+    """Run the prompt through the model, filling the cache.
+    Returns (logits for the last position [B, V], cache)."""
+    _, norm = common.make_norm(cfg.norm)
+    spec = cfg.attn_spec()
+
+    x = common.embed(params, tokens, cfg.embed_scale)
+    if prefix_embeddings is not None:
+        x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+
+    def step_fn(lp, c, x, is_local: bool):
+        lspec = dataclasses.replace(
+            spec, sliding_window=cfg.sliding_window if is_local else 0)
+        h = norm(lp["norm_attn"], x)
+        a, nc = common.prefill_into_cache(
+            lp["attn"], lspec, h, c,
+            ring=is_local and c["k"].shape[1] == cfg.sliding_window)
+        if cfg.post_norms:
+            a = norm(lp["post_norm_attn"], a)
+        x = x + a
+        h = norm(lp["norm_mlp"], x)
+        if cfg.moe is not None:
+            m, _ = moe_apply(lp["moe"], cfg.moe, h)
+        elif cfg.mlp_kind == "gated":
+            m = common.gated_mlp(lp["mlp"], h, cfg.act)
+        else:
+            m = common.mlp(lp["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            m = norm(lp["post_norm_mlp"], m)
+        return x + m, nc
+
+    x, new_cache = _interleave(cfg, params, x, cache, step_fn)
+    x = norm(params["final_norm"], x[:, -1:])
+    logits = common.unembed(params, x, cfg.tie_embeddings, cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg: TransformerConfig, params: Params, token: Array,
+                cache: Params, pos: Array) -> Tuple[Array, Params]:
+    """token: [B] int32; pos: scalar int32 (global position of `token`).
+    Returns (logits [B, V], updated cache)."""
+    _, norm = common.make_norm(cfg.norm)
+    spec = cfg.attn_spec()
+    x = common.embed(params, token[:, None], cfg.embed_scale)
+
+    def step_fn(lp, c, x, is_local: bool):
+        lspec = dataclasses.replace(
+            spec, sliding_window=cfg.sliding_window if is_local else 0)
+        h = norm(lp["norm_attn"], x)
+        ring = is_local and c["k"].shape[1] == cfg.sliding_window
+        a, nc = common.cached_attention(lp["attn"], lspec, h, c, pos,
+                                        ring=ring)
+        if cfg.post_norms:
+            a = norm(lp["post_norm_attn"], a)
+        x = x + a
+        h = norm(lp["norm_mlp"], x)
+        if cfg.moe is not None:
+            m, _ = moe_apply(lp["moe"], cfg.moe, h)
+        elif cfg.mlp_kind == "gated":
+            m = common.gated_mlp(lp["mlp"], h, cfg.act)
+        else:
+            m = common.mlp(lp["mlp"], h, cfg.act)
+        if cfg.post_norms:
+            m = norm(lp["post_norm_mlp"], m)
+        return x + m, nc
+
+    x, new_cache = _interleave(cfg, params, x, cache, step_fn)
+    x = norm(params["final_norm"], x)
+    logits = common.unembed(params, x, cfg.tie_embeddings, cfg.final_softcap)
+    return logits[:, 0], new_cache

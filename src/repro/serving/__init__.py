@@ -1,0 +1,4 @@
+"""Serving substrate: arrivals, batching, energy models, simulators and the
+JAX inference engine."""
+
+from repro.serving import energy, queueing, requests, simulator  # noqa: F401

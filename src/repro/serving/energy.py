@@ -1,0 +1,321 @@
+"""Analytical power / latency / energy models (paper Eqs. 2-7 + queueing).
+
+Latency model
+-------------
+Batch compute time (Eq. 3 generalized with a frequency-insensitive share):
+
+    t_batch(f, b) = t_unit * (c0 + b) * (kappa + (1 - kappa) * f_max / f)
+
+`kappa` is the fraction of batch time that does NOT scale with clock
+(memory/IO-bound work); the paper's Fig. 10 measurement (56% time reduction
+from 306->930.75 MHz) pins kappa ~= 0.38 for Llama3.2-1B on Orin.
+
+Request latency = queue wait + batch time + *saturation backlog*.  The paper's
+Eq. 7 assumes the server keeps up; its own "bottleneck" analysis (Qwen at
+small batches) shows it does not always.  With uniform arrivals at rate
+lambda, batch j's finish time has the closed form
+
+    finish_j = (b-1)/lambda + t_batch + j * max(b/lambda, t_batch)
+
+so the mean request latency over a horizon of J batches is
+
+    L = (b-1)/(2 lambda) + t_batch + (J-1)/2 * max(0, t_batch - b/lambda)
+
+(the last term is the backlog growth when service is slower than arrivals —
+exactly the effect that pins Qwen2.5-3B's optimum to max frequency).
+
+Power model
+-----------
+Eq. 2 with a per-level DVFS voltage ladder and a batch-utilization factor:
+
+    P(f, b) = P0 + c_eff * V(f)^2 * f * u(b),   u(b) = (b / b_ref) ** pu
+
+Energy per request = P * t_batch / b (Eq. 5).
+
+Calibration
+-----------
+The Jetson AGX Orin board + Llama3.2-1B / Qwen2.5-3B workload constants are
+calibrated (see EXPERIMENTS.md SS"Calibration") so the published operating
+points hold:
+  * Llama3.2-1B optimum at (816 MHz, b=20), EDP -28.8% vs (max f, max b)
+    [paper: -29.94%]
+  * Qwen2.5-3B optimum at (930.75 MHz, b=24), EDP -12.9% [paper: -12.46%]
+  * alpha up => f down / b up;  interval up => L up, E flat;  token-length
+    scaling => E, L linear (paper Figs. 7-9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Device profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DVFSBoard:
+    """A DVFS-capable accelerator board (paper: Jetson AGX Orin GA10B)."""
+
+    name: str
+    freqs_mhz: Tuple[float, ...]   # available clock levels, ascending
+    voltages: Tuple[float, ...]    # V at each level (DVFS ladder)
+    p_static: float                # W   (P0 in Eq. 2)
+    c_eff: float                   # W / (V^2 * GHz)   (C in Eq. 2)
+
+    def __post_init__(self):
+        if len(self.freqs_mhz) != len(self.voltages):
+            raise ValueError("freqs/voltages length mismatch")
+        if list(self.freqs_mhz) != sorted(self.freqs_mhz):
+            raise ValueError("freqs must be ascending")
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.freqs_mhz)
+
+    @property
+    def f_max(self) -> float:
+        return self.freqs_mhz[-1]
+
+    def level_of(self, freq_mhz: float) -> int:
+        for i, f in enumerate(self.freqs_mhz):
+            if abs(f - freq_mhz) < 1e-6:
+                return i
+        raise ValueError(f"{freq_mhz} MHz is not a DVFS level of {self.name}")
+
+    def power(self, level: int, util: float = 1.0) -> float:
+        """Eq. 2 with utilization: P0 + C * V^2 * f * u."""
+        v = self.voltages[level]
+        f_ghz = self.freqs_mhz[level] / 1000.0
+        return self.p_static + self.c_eff * v * v * f_ghz * float(util)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadModel:
+    """Per-(model, board) latency/utilization fit."""
+
+    name: str
+    t_unit: float      # s per work-unit at f_max
+    c0_units: float    # fixed per-batch overhead (work units; C0/c_p in Eq. 3)
+    kappa: float       # frequency-insensitive share of batch time at f_max
+    pu: float          # utilization exponent: u(b) = (b/b_ref)^pu
+    b_ref: int = 28
+    tokens_out: int = 70  # paper: max generated tokens per request
+
+    def freq_factor(self, board: DVFSBoard, level: int) -> float:
+        f = board.freqs_mhz[level]
+        return self.kappa + (1.0 - self.kappa) * board.f_max / f
+
+    def batch_time(self, board: DVFSBoard, level: int, batch: int,
+                   work_scale: float = 1.0) -> float:
+        """Eq. 3: t_batch.  `work_scale` scales per-request work c_p (token
+        length sensitivity, Fig. 8)."""
+        return (self.t_unit * (self.c0_units + work_scale * batch)
+                * self.freq_factor(board, level))
+
+    def utilization(self, batch: int) -> float:
+        return (batch / float(self.b_ref)) ** self.pu
+
+
+# ---------------------------------------------------------------------------
+# Energy / latency per (frequency level, batch) arm
+# ---------------------------------------------------------------------------
+
+
+def energy_per_request(board: DVFSBoard, work: WorkloadModel, level: int,
+                       batch: int, work_scale: float = 1.0) -> float:
+    """Eq. 5: E_request = P_total * t_batch / b."""
+    p = board.power(level, work.utilization(batch))
+    tb = work.batch_time(board, level, batch, work_scale)
+    return p * tb / batch
+
+
+def mean_latency(board: DVFSBoard, work: WorkloadModel, level: int,
+                 batch: int, arrival_rate: float, n_requests: int,
+                 work_scale: float = 1.0) -> float:
+    """Eq. 7 + saturation backlog over a finite horizon (see module doc)."""
+    tb = work.batch_time(board, level, batch, work_scale)
+    n_batches = int(np.ceil(n_requests / batch))
+    wait = (batch - 1) / (2.0 * arrival_rate)
+    backlog = max(0.0, tb - batch / arrival_rate) * (n_batches - 1) / 2.0
+    return wait + tb + backlog
+
+
+def landscape(board: DVFSBoard, work: WorkloadModel,
+              batch_sizes: Sequence[int], arrival_rate: float = 1.0,
+              n_requests: int = 2500, work_scale: float = 1.0,
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """(E, L) arrays of shape [n_levels, n_batches] — the paper's Fig. 1."""
+    nl, nb = board.n_levels, len(batch_sizes)
+    E = np.zeros((nl, nb))
+    L = np.zeros((nl, nb))
+    for i in range(nl):
+        for j, b in enumerate(batch_sizes):
+            E[i, j] = energy_per_request(board, work, i, int(b), work_scale)
+            L[i, j] = mean_latency(board, work, i, int(b), arrival_rate,
+                                   n_requests, work_scale)
+    return E, L
+
+
+# ---------------------------------------------------------------------------
+# Calibrated profiles (paper hardware)
+# ---------------------------------------------------------------------------
+
+#: Jetson AGX Orin GA10B (paper board).  The 930.75 MHz step is the
+#: MAXN-mode point with a disproportionate voltage bump — this is what makes
+#: the top step energy-inefficient and creates the interior optimum.
+JETSON_AGX_ORIN = DVFSBoard(
+    name="jetson_agx_orin",
+    freqs_mhz=(306.0, 408.0, 510.0, 612.0, 714.0, 816.0, 930.75),
+    voltages=(0.74, 0.76, 0.78, 0.80, 0.80, 0.80, 0.93),
+    p_static=14.0,
+    c_eff=75.0,
+)
+
+#: Llama3.2-1B (Q5_K_M) on Orin via llama.cpp.  kappa from the paper's 56%
+#: batching-time reduction (306->930.75 MHz); t_unit from t_batch(930.75, 4)
+#: = 2.86 s; c0/pu calibrated to the (816 MHz, 20) optimum and the -29.9% EDP.
+LLAMA32_1B_ORIN = WorkloadModel(
+    name="llama3.2-1b",
+    t_unit=2.86 / 52.0,
+    c0_units=48.0,
+    kappa=0.3766,
+    pu=0.2,
+)
+
+#: Qwen2.5-3B (Q5_K_M) on Orin.  t_unit from t_batch(930.75, 4) = 5.49 s (the
+#: paper's "bottleneck" batch time); small c0 / kappa: the 3B model is
+#: compute-dominated and saturates the GPU at any batch size (pu = 0).  The
+#: (930.75 MHz, 24) optimum is enforced by queueing: every arm below
+#: (930.75, 24) except (930.75, 28) is unstable at lambda = 1 req/s.
+QWEN25_3B_ORIN = WorkloadModel(
+    name="qwen2.5-3b",
+    t_unit=5.49 / 6.0,
+    c0_units=2.0,
+    kappa=0.05,
+    pu=0.0,
+)
+
+ORIN_WORKLOADS = {
+    "llama3.2-1b": LLAMA32_1B_ORIN,
+    "qwen2.5-3b": QWEN25_3B_ORIN,
+}
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e adaptation (see DESIGN.md SS3)
+# ---------------------------------------------------------------------------
+
+#: TPU v5e hardware constants (per chip).
+TPU_V5E_PEAK_FLOPS = 197e12       # bf16 FLOP/s
+TPU_V5E_HBM_BW = 819e9            # B/s
+TPU_V5E_ICI_BW = 5e10             # B/s per link
+TPU_V5E_P_IDLE = 65.0             # W (chip + share of host, idle)
+TPU_V5E_P_PEAK = 230.0            # W at nominal clock, full MXU utilization
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUChip:
+    """TPU chip with perf-state (relative clock) scaling.
+
+    Clock scales the *compute* roofline term only; HBM and ICI terms are
+    clock-independent (separate clock domains) — the structural difference
+    from the Jetson GPU, and why decode-heavy serving prefers low perf states
+    on TPU (decode is HBM-bound => latency ~flat, dynamic power falls).
+    """
+
+    name: str = "tpu_v5e"
+    peak_flops: float = TPU_V5E_PEAK_FLOPS
+    hbm_bw: float = TPU_V5E_HBM_BW
+    ici_bw: float = TPU_V5E_ICI_BW
+    p_idle: float = TPU_V5E_P_IDLE
+    p_peak: float = TPU_V5E_P_PEAK
+    perf_states: Tuple[float, ...] = (0.45, 0.55, 0.64, 0.73, 0.82, 0.91, 1.0)
+
+    def power(self, perf_state: float, compute_share: float,
+              util: float = 1.0) -> float:
+        """Dynamic power ~ V^2 f with V ~ affine in f; the memory system's
+        share does not scale with core clock."""
+        f = perf_state
+        v = 0.7 + 0.3 * f                      # normalized V(f)
+        core = compute_share * (v * v * f) / (1.0 * 1.0 * 1.0)
+        mem = (1.0 - compute_share)
+        return self.p_idle + (self.p_peak - self.p_idle) * util * (
+            core + mem) / 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUServedModel:
+    """Roofline-derived serving profile for one architecture on TPUChip.
+
+    Per decode step (one token for the whole batch):
+      compute_s(b)   = flops_per_token * b / peak_flops
+      memory_s(b)    = (weight_bytes + kv_bytes_per_seq * b) / hbm_bw
+      collective_s(b)= collective_bytes(b) / ici_bw
+    Values come from model configs analytically, or are refreshed from the
+    compiled dry-run's cost analysis (benchmarks.roofline).
+    """
+
+    name: str
+    flops_per_token: float         # activated FLOPs per generated token
+    weight_bytes: float            # bytes of parameters read per step (sharded)
+    kv_bytes_per_seq: float        # KV-cache bytes read per sequence per step
+    collective_bytes_per_token: float = 0.0
+    overhead_s: float = 2e-3       # per-step host/dispatch overhead
+
+    def step_time(self, chip: TPUChip, perf_state: float, batch: int,
+                  seq_len: float) -> Tuple[float, float]:
+        """(step_seconds, compute_share) for one decode step at batch b."""
+        comp = self.flops_per_token * batch / (chip.peak_flops * perf_state)
+        mem = (self.weight_bytes + self.kv_bytes_per_seq * seq_len * batch
+               ) / chip.hbm_bw
+        coll = self.collective_bytes_per_token * batch / chip.ici_bw
+        busy = max(comp, mem + coll)  # compute overlaps memory on TPU
+        share = comp / max(busy, 1e-12)
+        return busy + self.overhead_s, min(share, 1.0)
+
+
+def tpu_workload_from_config(name: str, n_params: float, n_active: float,
+                             kv_bytes_per_token_step: float,
+                             model_shards: int = 1,
+                             dtype_bytes: float = 2.0) -> TPUServedModel:
+    """Analytical profile: decode reads all (sharded) weights once per step;
+    FLOPs = 2 * activated params per token."""
+    return TPUServedModel(
+        name=name,
+        flops_per_token=2.0 * n_active,
+        weight_bytes=n_params * dtype_bytes / model_shards,
+        kv_bytes_per_seq=kv_bytes_per_token_step / model_shards,
+        collective_bytes_per_token=0.0 if model_shards == 1 else
+        4.0 * dtype_bytes * 4096,   # per-layer all-reduce fragments, coarse
+    )
+
+
+def tpu_decode_landscape(chip: TPUChip, model: TPUServedModel,
+                         batch_sizes: Sequence[int],
+                         tokens_out: int = 70,
+                         prompt_len: float = 256.0,
+                         arrival_rate: float = 1.0,
+                         n_requests: int = 2500,
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """(E, L) landscape over (perf_state x batch) for decode-dominated
+    serving: a request = `tokens_out` decode steps at mean context
+    prompt_len + tokens_out/2."""
+    nl, nb = len(chip.perf_states), len(batch_sizes)
+    E = np.zeros((nl, nb))
+    L = np.zeros((nl, nb))
+    ctx = prompt_len + tokens_out / 2.0
+    for i, ps in enumerate(chip.perf_states):
+        for j, b in enumerate(batch_sizes):
+            step_s, share = model.step_time(chip, ps, int(b), ctx)
+            tb = step_s * tokens_out          # batch service time
+            p = chip.power(ps, share, util=1.0)
+            E[i, j] = p * tb / b
+            n_batches = int(np.ceil(n_requests / b))
+            wait = (b - 1) / (2.0 * arrival_rate)
+            backlog = max(0.0, tb - b / arrival_rate) * (n_batches - 1) / 2.0
+            L[i, j] = wait + tb + backlog
+    return E, L

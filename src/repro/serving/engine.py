@@ -1,0 +1,129 @@
+"""Batched JAX inference engine: prefill + greedy decode with KV cache.
+
+This is the real-model backend behind the Camel controller (the simulator
+estimates (E, L); this engine produces them by actually running a model —
+on TPU with wall-clock+power integration, on CPU for the examples/tests
+with simulated energy from the analytical board model).
+
+Left-padding batches the ragged prompts: all sequences share position
+indices so a single prefill call fills the cache; padded slots are masked
+out by giving them positions inside the prompt (attention over pad tokens
+of the *same* sequence is harmless for random-weight examples and keeps
+the engine entirely static-shaped; a production engine would thread a
+pad mask through the models' attention — noted as a TODO boundary).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelBundle
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_s: float
+    decode_s: float
+    tokens_out: int
+
+    @property
+    def total_s(self) -> float:
+        return self.prefill_s + self.decode_s
+
+
+class InferenceEngine:
+    """Greedy batched generation with jitted prefill/decode steps."""
+
+    def __init__(self, bundle: ModelBundle, params, max_batch: int,
+                 max_seq_len: int, pad_id: int = 0):
+        self.bundle = bundle
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq_len = max_seq_len
+        self.pad_id = pad_id
+
+        self._prefill = jax.jit(
+            lambda p, toks, cache: bundle.prefill(p, toks, cache))
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: bundle.decode_step(p, tok, cache,
+                                                          pos))
+
+    def _pad_batch(self, prompts: List[np.ndarray]) -> Tuple[np.ndarray, int]:
+        b = len(prompts)
+        maxlen = max(len(p) for p in prompts)
+        out = np.full((b, maxlen), self.pad_id, np.int32)
+        for i, p in enumerate(prompts):
+            out[i, maxlen - len(p):] = p       # left padding
+        return out, maxlen
+
+    def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                 ) -> Tuple[np.ndarray, EngineStats]:
+        """Greedy-decode `max_new_tokens` for each prompt.
+        Returns (tokens [B, max_new_tokens], stats)."""
+        assert len(prompts) <= self.max_batch
+        toks, prompt_len = self._pad_batch(prompts)
+        b = toks.shape[0]
+        cache = self.bundle.init_cache(b, self.max_seq_len)
+
+        t0 = time.monotonic()
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        logits.block_until_ready()
+        t_prefill = time.monotonic() - t0
+
+        out = np.zeros((b, max_new_tokens), np.int32)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t0 = time.monotonic()
+        for i in range(max_new_tokens):
+            out[:, i] = np.asarray(tok)
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.asarray(prompt_len + i,
+                                                     jnp.int32))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok.block_until_ready()
+        t_decode = time.monotonic() - t0
+
+        return out, EngineStats(prefill_s=t_prefill, decode_s=t_decode,
+                                tokens_out=b * max_new_tokens)
+
+
+class EngineEnvironment:
+    """Camel Environment backed by the real engine: pulling an arm serves
+    one batch of synthetic prompts at that batch size and converts measured
+    wall time into (energy, latency) via the analytical board power model
+    at the arm's frequency level (CPU stand-in for the on-board power
+    monitor; on a Jetson/TPU deployment this is replaced by the power
+    rail/perf-state telemetry)."""
+
+    def __init__(self, engine: InferenceEngine, board, work,
+                 arrival_rate: float = 1.0, prompt_len: int = 32,
+                 max_new_tokens: int = 16, seed: int = 0):
+        self.engine = engine
+        self.board = board
+        self.work = work
+        self.arrival_rate = arrival_rate
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.rng = np.random.default_rng(seed)
+
+    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
+        batch = int(knobs["batch"])
+        level = self.board.level_of(float(knobs["freq_mhz"]))
+        vocab = self.engine.bundle.cfg.vocab_size
+        prompts = [self.rng.integers(1, vocab, size=self.prompt_len)
+                   .astype(np.int32) for _ in range(batch)]
+        _, st = self.engine.generate(prompts, self.max_new_tokens)
+
+        # Frequency scaling of measured time (CPU measures f_max behavior):
+        factor = self.work.freq_factor(self.board, level) \
+            / self.work.freq_factor(self.board, self.board.n_levels - 1)
+        t_batch = st.total_s * factor
+        p = self.board.power(level, self.work.utilization(batch))
+        energy = p * t_batch / batch
+        wait = (batch - 1) / (2.0 * self.arrival_rate)
+        return energy, wait + t_batch

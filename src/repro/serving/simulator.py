@@ -1,0 +1,291 @@
+"""Serving environments for the Camel controller.
+
+Two levels of fidelity:
+
+* `LandscapeEnv` — closed-form expected (E, L) per arm + observation noise.
+  This is the paper's *configuration search* setting (Results 1): both Camel
+  and grid search replay identical data points round by round.
+
+* `EventDrivenServer` — discrete-event simulation: requests arrive over
+  time, a FIFO batcher accumulates them, the server processes batches
+  sequentially; the controller may re-tune (frequency, batch) between
+  batches.  Queue backlog, saturation and drift all emerge naturally.  This
+  is the paper's *validation* setting (Results 2), and also what a real
+  engine integration replaces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.arms import ArmSpace
+from repro.core.controller import Environment
+from repro.serving import energy as energy_mod
+from repro.serving.energy import DVFSBoard, WorkloadModel
+from repro.serving.queueing import FIFOBatcher
+from repro.serving.requests import ArrivalProcess, Request
+
+
+# ---------------------------------------------------------------------------
+# Closed-form environment (configuration search experiments)
+# ---------------------------------------------------------------------------
+
+
+class LandscapeEnv(Environment):
+    """Expected landscape + multiplicative lognormal noise.
+
+    Knobs: {'freq_mhz': level value, 'batch': int}.
+    """
+
+    def __init__(self, board: DVFSBoard, work: WorkloadModel,
+                 arrival_rate: float = 1.0, n_requests: int = 2500,
+                 noise: float = 0.03, seed: int = 0,
+                 work_scale: float = 1.0):
+        self.board = board
+        self.work = work
+        self.arrival_rate = arrival_rate
+        self.n_requests = n_requests
+        self.noise = noise
+        self.rng = np.random.default_rng(seed)
+        self.work_scale = work_scale
+
+    def expected(self, knobs: Dict) -> Tuple[float, float]:
+        level = self.board.level_of(float(knobs["freq_mhz"]))
+        b = int(knobs["batch"])
+        e = energy_mod.energy_per_request(self.board, self.work, level, b,
+                                          self.work_scale)
+        l = energy_mod.mean_latency(self.board, self.work, level, b,
+                                    self.arrival_rate, self.n_requests,
+                                    self.work_scale)
+        return e, l
+
+    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
+        e, l = self.expected(knobs)
+        if self.noise > 0:
+            e *= float(np.exp(self.noise * self.rng.standard_normal()))
+            l *= float(np.exp(self.noise * self.rng.standard_normal()))
+        return e, l
+
+
+class TPULandscapeEnv(Environment):
+    """TPU v5e serving environment (DESIGN.md SS3 adaptation).
+
+    Knobs: {'perf_state': float, 'batch': int}.
+    """
+
+    def __init__(self, chip: energy_mod.TPUChip,
+                 model: energy_mod.TPUServedModel,
+                 tokens_out: int = 70, prompt_len: float = 256.0,
+                 arrival_rate: float = 1.0, n_requests: int = 2500,
+                 noise: float = 0.03, seed: int = 0):
+        self.chip = chip
+        self.model = model
+        self.tokens_out = tokens_out
+        self.prompt_len = prompt_len
+        self.arrival_rate = arrival_rate
+        self.n_requests = n_requests
+        self.noise = noise
+        self.rng = np.random.default_rng(seed)
+
+    def expected(self, knobs: Dict) -> Tuple[float, float]:
+        ps = float(knobs["perf_state"])
+        b = int(knobs["batch"])
+        ctx = self.prompt_len + self.tokens_out / 2.0
+        step_s, share = self.model.step_time(self.chip, ps, b, ctx)
+        tb = step_s * self.tokens_out
+        p = self.chip.power(ps, share)
+        e = p * tb / b
+        n_batches = int(np.ceil(self.n_requests / b))
+        wait = (b - 1) / (2.0 * self.arrival_rate)
+        backlog = max(0.0, tb - b / self.arrival_rate) * (n_batches - 1) / 2.0
+        return e, wait + tb + backlog
+
+    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
+        e, l = self.expected(knobs)
+        if self.noise > 0:
+            e *= float(np.exp(self.noise * self.rng.standard_normal()))
+            l *= float(np.exp(self.noise * self.rng.standard_normal()))
+        return e, l
+
+
+class TPUElasticEnv(TPULandscapeEnv):
+    """Beyond-paper third knob: `slice_width` = number of model-parallel
+    replica groups powered on.  More slices serve batches round-robin
+    (service rate x slices, so saturation recedes and queue wait shrinks)
+    but burn idle+dynamic power on every active chip — energy per request
+    scales with slices / throughput."""
+
+    def expected(self, knobs: Dict) -> Tuple[float, float]:
+        ps = float(knobs["perf_state"])
+        b = int(knobs["batch"])
+        w = int(knobs.get("slice_width", 1))
+        ctx = self.prompt_len + self.tokens_out / 2.0
+        step_s, share = self.model.step_time(self.chip, ps, b, ctx)
+        tb = step_s * self.tokens_out
+        p = self.chip.power(ps, share) * w        # w replica groups powered
+        e = p * tb / (b * w)                      # each serves 1/w batches
+        n_batches = int(np.ceil(self.n_requests / b))
+        wait = (b - 1) / (2.0 * self.arrival_rate)
+        # w slices drain the queue w-fold faster:
+        backlog = max(0.0, tb / w - b / self.arrival_rate) \
+            * (n_batches - 1) / 2.0
+        return e, wait + tb + backlog
+
+
+# ---------------------------------------------------------------------------
+# Event-driven simulation (validation experiments)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchStats:
+    bid: int
+    size: int
+    freq_mhz: float
+    start_s: float
+    finish_s: float
+    batch_time_s: float
+    energy_per_req: float
+    mean_latency_s: float
+
+
+@dataclasses.dataclass
+class ServeResult:
+    batches: List[BatchStats]
+    request_latencies: np.ndarray
+    request_energies: np.ndarray
+
+    def summary(self) -> dict:
+        e = self.request_energies
+        l = self.request_latencies
+        return {
+            "n_requests": int(len(l)),
+            "energy_per_req": float(e.mean()),
+            "latency_per_req": float(l.mean()),
+            "edp": float(e.mean() * l.mean()),
+            "p50_latency": float(np.percentile(l, 50)),
+            "p99_latency": float(np.percentile(l, 99)),
+        }
+
+
+class EventDrivenServer:
+    """Sequential-batch server over a concrete arrival trace.
+
+    `tuner(batch_index, server)` -> {'freq_mhz': ..., 'batch': ...} is called
+    before each batch is formed; pass a constant dict for fixed-config
+    validation, or wrap a bandit policy for online Camel.
+    """
+
+    def __init__(self, board: DVFSBoard, work: WorkloadModel,
+                 arrivals: ArrivalProcess, n_requests: int,
+                 noise: float = 0.02, seed: int = 0):
+        self.board = board
+        self.work = work
+        self.requests = list(arrivals.generate(n_requests))
+        self.noise = noise
+        self.rng = np.random.default_rng(seed)
+
+    def run(self, tuner) -> ServeResult:
+        batcher = FIFOBatcher()
+        pending = list(self.requests)
+        pending.reverse()           # pop from the end = earliest first
+        server_free_at = 0.0
+        batches: List[BatchStats] = []
+        lat: List[float] = []
+        en: List[float] = []
+        bi = 0
+
+        while pending or len(batcher):
+            knobs = tuner(bi, self)
+            level = self.board.level_of(float(knobs["freq_mhz"]))
+            bsize = int(knobs["batch"])
+
+            # Admit arrivals until the batch can be formed.
+            batch = batcher.try_pop_batch(min(bsize, len(batcher) +
+                                              len(pending)))
+            while batch is None:
+                if not pending:
+                    # Tail: serve the remainder as a final smaller batch.
+                    rem = batcher.drain()
+                    if not rem:
+                        break
+                    ready = max(r.arrival_s for r in rem)
+                    batch = _manual_batch(bi, rem, ready)
+                    break
+                batcher.add(pending.pop())
+                batch = batcher.try_pop_batch(bsize)
+            if batch is None:
+                break
+
+            tb = self.work.batch_time(self.board, level, batch.size)
+            if self.noise > 0:
+                tb *= float(np.exp(self.noise * self.rng.standard_normal()))
+            p = self.board.power(level, self.work.utilization(batch.size))
+            start = max(batch.ready_s, server_free_at)
+            finish = start + tb
+            server_free_at = finish
+            e_req = p * tb / batch.size
+
+            for r in batch.requests:
+                lat.append(finish - r.arrival_s)
+                en.append(e_req)
+            batches.append(BatchStats(
+                bid=batch.bid, size=batch.size,
+                freq_mhz=self.board.freqs_mhz[level], start_s=start,
+                finish_s=finish, batch_time_s=tb, energy_per_req=e_req,
+                mean_latency_s=float(np.mean(
+                    [finish - r.arrival_s for r in batch.requests]))))
+            bi += 1
+
+        return ServeResult(batches=batches,
+                           request_latencies=np.asarray(lat),
+                           request_energies=np.asarray(en))
+
+
+def _manual_batch(bid: int, reqs: List[Request], ready: float):
+    from repro.serving.queueing import Batch
+    return Batch(bid=bid, requests=reqs, ready_s=ready)
+
+
+def fixed_config_tuner(freq_mhz: float, batch: int):
+    knobs = {"freq_mhz": freq_mhz, "batch": batch}
+    return lambda bi, server: knobs
+
+
+class OnlineCamelTuner:
+    """Wraps a bandit policy as an EventDrivenServer tuner: updates the
+    posterior with the observed cost of the previous batch before choosing
+    the next arm.  This is the full closed loop of Fig. 2."""
+
+    def __init__(self, space: ArmSpace, policy, cost_model, seed: int = 0):
+        import jax
+        self._jax = jax
+        self.space = space
+        self.policy = policy
+        self.cost_model = cost_model
+        self.state = policy.init(space.n_arms)
+        self.key = jax.random.PRNGKey(seed)
+        self._last_arm: Optional[int] = None
+        self._observations: List[Tuple[int, float]] = []
+
+    def observe(self, energy: float, latency: float) -> None:
+        if self._last_arm is None:
+            return
+        import jax.numpy as jnp
+        cost = float(self.cost_model.cost(energy, latency))
+        self.state = self.policy.update(self.state,
+                                        jnp.asarray(self._last_arm),
+                                        jnp.asarray(cost, jnp.float32))
+        self._observations.append((self._last_arm, cost))
+
+    def __call__(self, bi: int, server) -> Dict:
+        # Feed back the previous batch's stats (available on the server's
+        # last BatchStats via closure users; simplest: users call observe()).
+        self.key, sub = self._jax.random.split(self.key)
+        arm = int(self.policy.select(self.state, sub,
+                                     self._jax.numpy.asarray(bi + 1)))
+        self._last_arm = arm
+        return self.space.values(arm)

@@ -1,0 +1,190 @@
+"""Fault-tolerant checkpointing (no orbax dependency).
+
+Format: one directory per step, containing
+    manifest.json   — tree structure, shapes, dtypes, step, data-pipeline
+                      state, monotonic save id
+    arrays.npz      — flattened leaves (params + optimizer + anything)
+
+Guarantees:
+  * atomic publish: write to `step_<n>.tmp-<pid>`, fsync, rename — a crash
+    mid-save never corrupts the latest checkpoint;
+  * keep-N retention with never-delete-newest;
+  * `restore_latest` skips torn/incomplete directories;
+  * emergency save hook (signal handler) for preemption;
+  * save/restore round-trips bf16 (stored as uint16 views — npz has no
+    native bfloat16).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import signal
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extra: Optional[Dict] = None, keep: int = 3) -> Path:
+    """Atomically persist `tree` for `step`.  Returns the final path."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:010d}"
+    tmp = ckpt_dir / f"step_{step:010d}.tmp-{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    meta = {}
+    for key, leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key] = arr.view(np.uint16)
+            meta[key] = {"dtype": "bfloat16"}
+        else:
+            arrays[key] = arr
+            meta[key] = {"dtype": str(arr.dtype)}
+    np.savez(tmp / _ARRAYS, **arrays)
+
+    manifest = {
+        "step": int(step),
+        "save_id": time.time_ns(),
+        "leaves": meta,
+        "extra": extra or {},
+        "complete": True,
+    }
+    mpath = tmp / _MANIFEST
+    mpath.write_text(json.dumps(manifest))
+    with open(mpath) as f:           # fsync the manifest
+        os.fsync(f.fileno())
+
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)            # atomic publish
+
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(p for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp")
+                   and ".tmp-" not in p.name)
+    for p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def _is_complete(path: Path) -> bool:
+    m = path / _MANIFEST
+    a = path / _ARRAYS
+    if not (m.exists() and a.exists()):
+        return False
+    try:
+        return bool(json.loads(m.read_text()).get("complete"))
+    except (json.JSONDecodeError, OSError):
+        return False
+
+
+def available_steps(ckpt_dir: str | Path) -> List[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in sorted(ckpt_dir.glob("step_*")):
+        if ".tmp-" in p.name or not _is_complete(p):
+            continue
+        out.append(int(p.name.split("_")[1]))
+    return out
+
+
+def restore(ckpt_dir: str | Path, step: int, template: Any,
+            ) -> Tuple[Any, Dict]:
+    """Restore `step` into the structure of `template` (shapes validated)."""
+    path = Path(ckpt_dir) / f"step_{step:010d}"
+    manifest = json.loads((path / _MANIFEST).read_text())
+    data = np.load(path / _ARRAYS)
+
+    leaves = _flatten_with_paths(template)
+    restored = []
+    for key, leaf in leaves:
+        arr = data[key]
+        want_dtype = manifest["leaves"][key]["dtype"]
+        if want_dtype == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"checkpoint leaf {key}: shape {arr.shape} != template "
+                f"{np.shape(leaf)}")
+        restored.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(template)
+    return treedef.unflatten(restored), manifest.get("extra", {})
+
+
+def restore_latest(ckpt_dir: str | Path, template: Any,
+                   ) -> Optional[Tuple[int, Any, Dict]]:
+    """(step, tree, extra) for the newest complete checkpoint, or None."""
+    steps = available_steps(ckpt_dir)
+    if not steps:
+        return None
+    step = steps[-1]
+    tree, extra = restore(ckpt_dir, step, template)
+    return step, tree, extra
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Periodic + emergency checkpointing for the training loop."""
+
+    ckpt_dir: Path
+    every_steps: int = 100
+    keep: int = 3
+    _emergency: bool = dataclasses.field(default=False, init=False)
+
+    def __post_init__(self):
+        self.ckpt_dir = Path(self.ckpt_dir)
+
+    def install_signal_handler(self, signals=(signal.SIGTERM,)) -> None:
+        """On SIGTERM (preemption), flag an emergency save for the next
+        step boundary (async-safe: no IO inside the handler)."""
+        def _handler(signum, frame):
+            self._emergency = True
+        for s in signals:
+            signal.signal(s, _handler)
+
+    def maybe_save(self, step: int, tree: Any,
+                   extra: Optional[Dict] = None) -> Optional[Path]:
+        if self._emergency or (step > 0 and step % self.every_steps == 0):
+            self._emergency = False
+            return save(self.ckpt_dir, step, tree, extra, self.keep)
+        return None
+
+    def restore_or_init(self, template: Any, init_fn: Callable[[], Any],
+                        ) -> Tuple[int, Any, Dict]:
+        got = restore_latest(self.ckpt_dir, template)
+        if got is None:
+            return 0, init_fn(), {}
+        return got

@@ -1,0 +1,103 @@
+"""Arm space, cost metric and structured-prior tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import priors
+from repro.core.arms import (ArmSpace, paper_arm_space, tpu_arm_space,
+                             tpu_elastic_arm_space)
+from repro.core.cost import CostModel, RegretTracker, summarize_run
+
+
+def test_paper_space_is_49_arms():
+    sp = paper_arm_space()
+    assert sp.n_arms == 49
+    assert sp.values(0) == {"freq_mhz": 306.0, "batch": 4}
+    assert sp.values(48) == {"freq_mhz": 930.75, "batch": 28}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 48))
+def test_index_values_bijection(arm):
+    sp = paper_arm_space()
+    assert sp.index(**sp.values(arm)) == arm
+
+
+def test_elastic_space_composes_knobs():
+    sp = tpu_elastic_arm_space(slice_widths=(1, 2, 4))
+    assert sp.n_arms == 7 * 7 * 3
+    v = sp.values(sp.n_arms - 1)
+    assert v["slice_width"] == 4 and v["perf_state"] == 1.0
+
+
+def test_corners():
+    sp = paper_arm_space()
+    assert sp.values(sp.corner())["batch"] == 28
+    assert sp.values(sp.corner(freq_mhz="min"))["freq_mhz"] == 306.0
+    assert sp.values(sp.corner(batch="min"))["batch"] == 4
+
+
+def test_cost_model_eq1():
+    cm = CostModel(alpha=0.3, energy_ref=10.0, latency_ref=5.0)
+    # alpha*E/Eref + (1-alpha)*L/Lref
+    assert np.isclose(cm.cost(10.0, 5.0), 1.0)
+    assert np.isclose(cm.cost(20.0, 5.0), 0.3 * 2 + 0.7)
+    with pytest.raises(ValueError):
+        CostModel(alpha=1.5)
+
+
+def test_alpha_extremes():
+    cm_e = CostModel(alpha=1.0, energy_ref=1, latency_ref=1)
+    cm_l = CostModel(alpha=0.0, energy_ref=1, latency_ref=1)
+    assert cm_e.cost(2.0, 100.0) == 2.0       # pure energy
+    assert cm_l.cost(100.0, 3.0) == 3.0       # pure latency
+
+
+def test_regret_tracker():
+    rt = RegretTracker(optimal_cost=1.0)
+    rt.record(1.5)
+    rt.record(1.0)
+    assert np.isclose(rt.cum_regret, 0.5)
+    assert len(rt.curve) == 2
+
+
+def test_summarize_run_edp():
+    s = summarize_run(np.array([2.0, 4.0]), np.array([1.0, 2.0]),
+                      np.array([0.5, 0.7]))
+    assert np.isclose(s["edp"], np.mean([2.0, 8.0]))
+
+
+def test_structured_prior_shapes_and_reference():
+    sp = paper_arm_space()
+    mu, sig = priors.analytic_cost_prior(sp, probe_batch_time_s=2.86,
+                                         probe_batch=4)
+    assert mu.shape == (49,) and sig.shape == (49,)
+    # reference arm (max f, max b) predicted cost is exactly 1
+    assert np.isclose(mu[sp.corner()], 1.0, atol=1e-6)
+    # sigma inflated away from cost 1
+    far = int(np.argmax(np.abs(np.log(np.maximum(mu, 1e-9)))))
+    assert sig[far] > sig[sp.corner()]
+
+
+def test_prior_penalizes_saturated_arms():
+    """Low-frequency small-batch arms (saturating at lambda=1) must get
+    high prior means — that is what lets Camel skip them (Fig. 6)."""
+    sp = paper_arm_space()
+    mu, _ = priors.analytic_cost_prior(sp, 2.86, 4)
+    bad = sp.index(freq_mhz=306.0, batch=4)
+    good = sp.index(freq_mhz=816.0, batch=20)
+    assert mu[bad] > 3.0 * mu[good]
+
+
+def test_prior_uses_coarse_not_simulator_constants():
+    """The prior physics must differ from the simulator's calibrated
+    constants (no oracle leakage)."""
+    from repro.serving import energy
+    ph = priors.CoarsePhysics()
+    board = energy.JETSON_AGX_ORIN
+    assert ph.p_static != board.p_static
+    assert ph.c_eff != board.c_eff
+    work = energy.LLAMA32_1B_ORIN
+    assert ph.kappa != work.kappa
+    assert ph.c0_units != work.c0_units

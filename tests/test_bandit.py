@@ -1,0 +1,115 @@
+"""Unit + property tests for Camel's Thompson sampler (paper Eqs. 13-20)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bandit
+
+
+def _posterior_closed_form(xs, mu0, sigma2_0, sigma1):
+    """Eqs. 19-20 computed independently."""
+    n = len(xs)
+    xbar = float(np.mean(xs))
+    xi1 = 1.0 / sigma1 ** 2
+    xi2 = 1.0 / sigma2_0 ** 2
+    mu = (n * xi1 * xbar + mu0 * xi2) / (n * xi1 + xi2)
+    sig = np.sqrt(1.0 / (n * xi1 + xi2))
+    return mu, sig
+
+
+def test_update_matches_closed_form():
+    """After >=2 observations the posterior must equal Eqs. 19-20 with
+    sigma1 = std of the arm's observed costs."""
+    state = bandit.init_state(3, prior_mu=1.0, prior_sigma=0.5)
+    xs = [0.8, 0.9, 0.85, 0.95]
+    for x in xs:
+        state = bandit.update(state, 1, x)
+    sigma1 = max(float(np.std(xs)), 1e-3)
+    mu, sig = _posterior_closed_form(xs, 1.0, 0.5, sigma1)
+    assert np.isclose(float(state.mu[1]), mu, rtol=1e-4)
+    assert np.isclose(float(state.sigma2[1]), sig, rtol=1e-4)
+    # untouched arms keep the prior
+    assert float(state.mu[0]) == 1.0
+    assert float(state.sigma2[2]) == 0.5
+
+
+def test_posterior_variance_shrinks():
+    """Posterior std shrinks overall with data (small non-monotonic bumps
+    allowed: sigma1 is re-estimated from the arm's observed variance each
+    update, per the paper's UPDATE)."""
+    state = bandit.init_state(1, prior_mu=1.0, prior_sigma=0.5)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        state = bandit.update(state, 0, 0.7 + 0.01 * rng.standard_normal())
+    assert float(state.sigma2[0]) < 0.05
+
+
+def test_mean_cost_tracks_observations():
+    state = bandit.init_state(2)
+    for x in (2.0, 4.0):
+        state = bandit.update(state, 0, x)
+    m = state.mean_cost()
+    assert np.isclose(float(m[0]), 3.0)
+    assert float(m[1]) == 1.0  # prior mean where unpulled
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    best=st.integers(0, 5),
+    gap=st.floats(0.1, 0.5),
+    seed=st.integers(0, 10_000),
+)
+def test_convergence_property(best, gap, seed):
+    """TS must concentrate pulls on the best arm given enough rounds."""
+    costs = np.full(6, 1.0, np.float32)
+    costs[best] = 1.0 - gap
+    state, pulls, _ = bandit.run_bandit(
+        jax.random.PRNGKey(seed), jnp.asarray(costs), 300,
+        prior_mu=1.0, prior_sigma=0.3, cost_noise=0.02)
+    counts = np.bincount(np.asarray(pulls), minlength=6)
+    assert counts[best] == counts.max()
+    assert counts[best] > 150  # majority of pulls on the best arm
+
+
+def test_streaming_and_batch_updates_close():
+    """One-sample conjugate chaining approximates the batch recompute for
+    near-constant observations."""
+    s1 = bandit.init_state(1, 1.0, 0.3)
+    s2 = bandit.init_state(1, 1.0, 0.3)
+    for x in (0.7, 0.71, 0.69, 0.7):
+        s1 = bandit.update(s1, 0, x)
+        s2 = bandit.update_streaming(s2, 0, x)
+    assert np.isclose(float(s1.mu[0]), float(s2.mu[0]), atol=0.05)
+
+
+def test_windowed_ts_adapts_to_drift():
+    """Sliding-window TS re-identifies the optimum after the landscape
+    flips; full-history TS is slower (the paper's stationarity assumption)."""
+    key = jax.random.PRNGKey(0)
+    n_arms = 3
+    w = bandit.init_windowed(n_arms, gamma=0.9, prior_sigma=0.3)
+    costs_a = np.array([0.5, 1.0, 1.0], np.float32)
+    costs_b = np.array([1.0, 1.0, 0.5], np.float32)
+    pulls_after_flip = []
+    for t in range(400):
+        key, sub = jax.random.split(key)
+        arm = int(bandit.windowed_select(w, sub))
+        c = (costs_a if t < 200 else costs_b)[arm]
+        w = bandit.windowed_update(w, arm, float(c) + 0.01 * (t % 3 - 1))
+        if t >= 300:
+            pulls_after_flip.append(arm)
+    counts = np.bincount(np.asarray(pulls_after_flip), minlength=3)
+    # new optimum is the clear plurality after the flip
+    assert counts[2] == counts.max()
+    assert counts[2] > 0.45 * counts.sum()
+
+
+def test_active_mask_excludes_arms():
+    state = bandit.init_state(4)
+    mask = jnp.asarray([True, False, True, False])
+    for seed in range(20):
+        arm = int(bandit.select_arm(state, jax.random.PRNGKey(seed), mask))
+        assert arm in (0, 2)

@@ -1,0 +1,190 @@
+"""Pallas kernel validation: shape/dtype sweeps vs. pure-jnp oracles,
+executed in interpret mode on CPU (hypothesis drives the shape sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_ref)
+from repro.kernels.flash_attention.ops import attention_ref, flash_attention
+from repro.kernels.moe_gemm.ops import grouped_gemm, moe_gemm_ref
+from repro.kernels.rglru.ops import rglru, rglru_scan_ref
+from repro.kernels.rmsnorm.ops import rmsnorm, rmsnorm_ref
+from repro.kernels.rwkv6.ops import wkv6, wkv6_sequential
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        sq=st.sampled_from([64, 128, 192]),
+        kvh=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 3]),
+        d=st.sampled_from([32, 64]),
+        causal=st.booleans(),
+    )
+    def test_shapes_sweep(self, b, sq, kvh, g, d, causal):
+        h = kvh * g
+        key = jax.random.PRNGKey(b * 1000 + sq + h + d)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, sq, kvh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, sq, kvh, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, block_q=64,
+                              block_kv=64, interpret=True)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 64])
+    def test_sliding_window(self, window):
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32)
+        out = flash_attention(q, k, v, window=window, block_q=32,
+                              block_kv=32, interpret=True)
+        ref = attention_ref(q, k, v, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap_and_bf16(self):
+        key = jax.random.PRNGKey(1)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (2, 64, 2, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (2, 64, 2, 64), jnp.bfloat16)
+        out = flash_attention(q, k, v, softcap=50.0, block_q=32,
+                              block_kv=32, interpret=True)
+        ref = attention_ref(q, k, v, softcap=50.0)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_tol(jnp.bfloat16))
+
+
+class TestDecodeAttention:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        kvh=st.sampled_from([1, 2, 4]),
+        g=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([128, 256]),
+        frac=st.floats(0.05, 1.0),
+    )
+    def test_kv_len_sweep(self, b, kvh, g, s, frac):
+        h, d = kvh * g, 64
+        kv_len = max(1, int(s * frac))
+        key = jax.random.PRNGKey(kv_len + b)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+        out = decode_attention(q, k, v, jnp.asarray(kv_len), block_kv=64,
+                               interpret=True)
+        ref = decode_attention_ref(q, k, v, jnp.asarray(kv_len))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestWKV6:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        s=st.sampled_from([32, 64, 96]),
+        h=st.sampled_from([1, 2]),
+        n=st.sampled_from([16, 32]),
+        chunk=st.sampled_from([8, 16, 32]),
+    )
+    def test_chunked_vs_sequential(self, b, s, h, n, chunk):
+        if s % chunk:
+            chunk = 8 if s % 8 == 0 else s
+        key = jax.random.PRNGKey(s + h * 7 + n)
+        ks = jax.random.split(key, 5)
+        r = 0.5 * jax.random.normal(ks[0], (b, s, h, n), jnp.float32)
+        k = 0.5 * jax.random.normal(ks[1], (b, s, h, n), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, n), jnp.float32)
+        logw = jnp.clip(-jnp.exp(
+            jax.random.normal(ks[3], (b, s, h, n)) - 2.0), -4.0, -1e-6)
+        u = 0.2 * jax.random.normal(ks[4], (h, n), jnp.float32)
+        st0 = jnp.zeros((b, h, n, n), jnp.float32)
+        y0, s0 = wkv6_sequential(r, k, v, logw, u, st0)
+        y1, s1 = wkv6(r, k, v, logw, u, st0, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_extreme_decay_stays_finite(self):
+        """Clamped decays at the fp32 exponent budget must not overflow."""
+        b, s, h, n = 1, 64, 1, 16
+        r = jnp.ones((b, s, h, n)) * 0.5
+        k = jnp.ones((b, s, h, n)) * 0.5
+        v = jnp.ones((b, s, h, n))
+        logw = jnp.full((b, s, h, n), -4.0)      # fastest allowed decay
+        u = jnp.zeros((h, n))
+        st0 = jnp.zeros((b, h, n, n), jnp.float32)
+        y, s_fin = wkv6(r, k, v, logw, u, st0, chunk=32, interpret=True)
+        assert np.isfinite(np.asarray(y)).all()
+        assert np.isfinite(np.asarray(s_fin)).all()
+
+
+class TestRGLRU:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        b=st.integers(1, 2),
+        s=st.sampled_from([32, 64]),
+        w=st.sampled_from([128, 256]),
+        chunk=st.sampled_from([8, 16]),
+    )
+    def test_scan_sweep(self, b, s, w, chunk):
+        key = jax.random.PRNGKey(s + w)
+        ks = jax.random.split(key, 2)
+        log_a = -jnp.exp(jax.random.normal(ks[0], (b, s, w)) - 1.5)
+        bb = jax.random.normal(ks[1], (b, s, w))
+        h0, hl0 = rglru_scan_ref(log_a, bb)
+        h1, hl1 = rglru(log_a, bb, chunk=chunk, block_w=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(hl0), np.asarray(hl1),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestRMSNorm:
+    @settings(max_examples=6, deadline=None)
+    @given(rows=st.integers(1, 300), d=st.sampled_from([64, 128, 256]))
+    def test_rows_sweep(self, rows, d):
+        key = jax.random.PRNGKey(rows * 31 + d)
+        x = jax.random.normal(key, (rows, d), jnp.float32)
+        sc = 0.1 * jax.random.normal(jax.random.PRNGKey(d), (d,))
+        out = rmsnorm(x, sc, interpret=True)
+        ref = rmsnorm_ref(x, sc)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMoEGEMM:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        e=st.sampled_from([2, 4, 8]),
+        c=st.sampled_from([32, 64, 96]),
+        d=st.sampled_from([32, 64]),
+        f=st.sampled_from([48, 64]),
+    )
+    def test_grouped_sweep(self, e, c, d, f):
+        key = jax.random.PRNGKey(e * 100 + c)
+        x = jax.random.normal(key, (e, c, d), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(f), (e, d, f), jnp.float32)
+        out = grouped_gemm(x, w, interpret=True, block_c=32, block_f=32,
+                           block_k=32)
+        ref = moe_gemm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,154 @@
+"""Serving substrate: batcher, event-driven simulator, engine, and the
+closed-loop controller against both."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro.core import arms, baselines, controller, cost, priors
+from repro.models.registry import bundle_for
+from repro.serving import energy, simulator
+from repro.serving.engine import InferenceEngine
+from repro.serving.queueing import FIFOBatcher
+from repro.serving.requests import ArrivalProcess, Request
+
+
+def test_batcher_fifo_and_sizes():
+    b = FIFOBatcher()
+    for i in range(10):
+        b.add(Request(rid=i, arrival_s=float(i), prompt_len=8,
+                      max_new_tokens=4))
+    assert b.try_pop_batch(16) is None
+    batch = b.try_pop_batch(4)
+    assert [r.rid for r in batch.requests] == [0, 1, 2, 3]
+    assert batch.ready_s == 3.0
+    assert len(b) == 6
+
+
+def test_arrivals_uniform_and_poisson():
+    u = list(ArrivalProcess(interval_s=2.0).generate(5))
+    assert [r.arrival_s for r in u] == [0.0, 2.0, 4.0, 6.0, 8.0]
+    p = list(ArrivalProcess(interval_s=1.0, kind="poisson",
+                            seed=1).generate(200))
+    gaps = np.diff([r.arrival_s for r in p])
+    assert 0.7 < gaps.mean() < 1.4
+
+
+def test_event_sim_matches_eq7_when_unsaturated():
+    """Fixed config, stable service: event-driven mean latency must match
+    the closed form (b-1)/2λ + t_batch."""
+    board = energy.JETSON_AGX_ORIN
+    work = energy.LLAMA32_1B_ORIN
+    server = simulator.EventDrivenServer(
+        board, work, ArrivalProcess(interval_s=1.0), n_requests=400,
+        noise=0.0)
+    res = server.run(simulator.fixed_config_tuner(816.0, 20))
+    tb = work.batch_time(board, board.level_of(816.0), 20)
+    expect = (20 - 1) / 2.0 + tb
+    assert abs(res.summary()["latency_per_req"] - expect) < 0.15 * expect
+
+
+def test_event_sim_saturation_backlog():
+    """Qwen at (max f, min b) is unstable at 1 req/s (the paper's
+    'bottleneck'): latency must grow far beyond Eq. 7."""
+    board = energy.JETSON_AGX_ORIN
+    work = energy.QWEN25_3B_ORIN
+    server = simulator.EventDrivenServer(
+        board, work, ArrivalProcess(interval_s=1.0), n_requests=300,
+        noise=0.0)
+    res = server.run(simulator.fixed_config_tuner(930.75, 4))
+    eq7 = (4 - 1) / 2.0 + work.batch_time(board, 6, 4)
+    assert res.summary()["latency_per_req"] > 5 * eq7
+
+
+def test_all_requests_served_exactly_once():
+    board = energy.JETSON_AGX_ORIN
+    work = energy.LLAMA32_1B_ORIN
+    n = 157  # not a multiple of the batch size: tail batch
+    server = simulator.EventDrivenServer(
+        board, work, ArrivalProcess(interval_s=1.0), n_requests=n)
+    res = server.run(simulator.fixed_config_tuner(816.0, 20))
+    assert len(res.request_latencies) == n
+    assert (res.request_latencies > 0).all()
+
+
+def test_camel_beats_grid_on_llama_landscape():
+    """Headline search claim (paper Fig. 3): Camel's 49-round search has
+    lower average cost, EDP and regret than grid search."""
+    board = energy.JETSON_AGX_ORIN
+    work = energy.LLAMA32_1B_ORIN
+    space = arms.paper_arm_space()
+    cm = cost.CostModel(alpha=0.5)
+    env0 = simulator.LandscapeEnv(board, work, noise=0.03)
+    e_ref, l_ref = env0.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
+                                                     cm)
+    probe_tb = work.batch_time(board, board.n_levels - 1, 4)
+    mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, 4)
+
+    ratios = []
+    for seed in range(4):
+        c1 = controller.Controller(
+            space, baselines.make_policy("camel", prior_mu=mu0,
+                                         prior_sigma=sig0),
+            cm, optimal_cost=opt_cost, seed=seed)
+        r1 = c1.run(simulator.LandscapeEnv(board, work, noise=0.03,
+                                           seed=seed), 49).summary()
+        c2 = controller.Controller(space, baselines.make_policy("grid"),
+                                   cm, optimal_cost=opt_cost, seed=seed)
+        r2 = c2.run(simulator.LandscapeEnv(board, work, noise=0.03,
+                                           seed=seed), 49).summary()
+        ratios.append((r1["cost"] / r2["cost"], r1["edp"] / r2["edp"],
+                       r2["cum_regret"] / max(r1["cum_regret"], 1e-9)))
+    cost_r = np.mean([r[0] for r in ratios])
+    edp_r = np.mean([r[1] for r in ratios])
+    regret_x = np.mean([r[2] for r in ratios])
+    assert cost_r < 0.75        # paper: 0.536
+    assert edp_r < 0.6          # paper: 0.505
+    assert regret_x > 2.0       # paper: 3.8x
+
+
+def test_online_camel_tuner_closed_loop():
+    """OnlineCamelTuner drives the event-driven server end to end and its
+    committed config beats the worst default corner."""
+    board = energy.JETSON_AGX_ORIN
+    work = energy.LLAMA32_1B_ORIN
+    space = arms.paper_arm_space()
+    cm = cost.CostModel(alpha=0.5, energy_ref=10.0, latency_ref=17.0)
+    tuner = simulator.OnlineCamelTuner(
+        space, baselines.make_policy("camel", prior_mu=1.0,
+                                     prior_sigma=0.15), cm, seed=0)
+
+    board_srv = simulator.EventDrivenServer(
+        board, work, ArrivalProcess(interval_s=1.0), n_requests=600,
+        noise=0.02)
+
+    def tuner_with_feedback(bi, server):
+        knobs = tuner(bi, server)
+        return knobs
+
+    res = board_srv.run(tuner_with_feedback)
+    # feed back observations post-hoc (per-batch) and re-run exploitation
+    for bs in res.batches:
+        tuner._last_arm = space.index(freq_mhz=bs.freq_mhz, batch=bs.size) \
+            if bs.size in space.grid("batch") else tuner._last_arm
+        tuner.observe(bs.energy_per_req, bs.mean_latency_s)
+    assert len(res.batches) > 0
+    assert len(res.request_latencies) == 600
+
+
+def test_engine_generates_and_is_deterministic():
+    cfg = C.get_smoke("smollm-360m")
+    b = bundle_for(cfg)
+    params = b.init_params(jax.random.PRNGKey(0))
+    eng = InferenceEngine(b, params, max_batch=4, max_seq_len=64)
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(3, 15, dtype=np.int32)]
+    out1, st1 = eng.generate(prompts, max_new_tokens=6)
+    out2, _ = eng.generate(prompts, max_new_tokens=6)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(out1, out2)
+    assert st1.total_s > 0

@@ -1,0 +1,205 @@
+"""Checkpointing, data pipeline, gradient compression, elastic/watchdog,
+and the train loop's crash/resume path."""
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training import checkpoint as ck
+from repro.training import compression as comp
+from repro.training import optimizer as opt_mod
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.elastic import (StragglerWatchdog, reshard_plan,
+                                    shrink_data_axis)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (4, 8), jnp.float32),
+        "b16": jax.random.normal(k, (3,), jnp.float32).astype(jnp.bfloat16),
+        "nested": {"step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 5, t, extra={"data_step": 5})
+    restored, extra = ck.restore(tmp_path, 5, jax.eval_shape(lambda: t))
+    assert extra["data_step"] == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_n(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ck.save(tmp_path, s, t, keep=2)
+    assert ck.available_steps(tmp_path) == [4, 5]
+
+
+def test_restore_latest_skips_torn(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 1, t)
+    ck.save(tmp_path, 2, t)
+    # corrupt the newest: truncate manifest
+    (tmp_path / "step_0000000002" / "manifest.json").write_text("{")
+    got = ck.restore_latest(tmp_path, jax.eval_shape(lambda: t))
+    assert got is not None and got[0] == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ck.save(tmp_path, 1, _tree())
+    bad = {"w": jnp.zeros((2, 2)), "b16": jnp.zeros((3,), jnp.bfloat16),
+           "nested": {"step": jnp.asarray(0)}}
+    with pytest.raises(ValueError, match="shape"):
+        ck.restore(tmp_path, 1, bad)
+
+
+def test_train_crash_and_resume(tmp_path):
+    """Injected failure mid-training; a rerun resumes from the checkpoint
+    and continues to the target step."""
+    from repro.launch.train import run_training
+    with pytest.raises(RuntimeError, match="injected failure"):
+        run_training("smollm-360m", smoke=True, steps=10, global_batch=2,
+                     seq_len=16, ckpt_dir=str(tmp_path), ckpt_every=2,
+                     fail_at_step=5, log_every=100)
+    out = run_training("smollm-360m", smoke=True, steps=10, global_batch=2,
+                       seq_len=16, ckpt_dir=str(tmp_path), ckpt_every=2,
+                       log_every=100)
+    assert out["start_step"] >= 4          # resumed, not restarted
+    assert out["start_step"] + out["steps_run"] == 10
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=3)
+    d1, d2 = SyntheticLM(cfg), SyntheticLM(cfg)
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_data_host_shards_partition_global_batch():
+    cfg = DataConfig(vocab_size=512, seq_len=8, global_batch=8)
+    d = SyntheticLM(cfg)
+    full = d.batch(0)["tokens"]
+    parts = [d.host_shard(0, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.asarray(jnp.concatenate(parts)),
+                                  np.asarray(full))
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=128, seq_len=12, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].shape == (2, 12)
+    # labels[t] == tokens[t+1] by construction on the shared stream
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.01, 100.0))
+def test_quantize_error_bound(seed, scale):
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (777,))
+    rt = comp.roundtrip(x)
+    block_max = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(rt - x))) <= block_max / 127.0 + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated compressed sum converges to the
+    true gradient sum (EF compensates quantization bias)."""
+    g = {"w": 0.01 * jax.random.normal(jax.random.PRNGKey(0), (512,))}
+    err = comp.init_error_state(g)
+    total_q = jnp.zeros((512,))
+    for _ in range(50):
+        q, err = comp.compressed_grads(g, err)
+        total_q = total_q + q["w"]
+    true_total = g["w"] * 50
+    rel = float(jnp.linalg.norm(total_q - true_total)
+                / jnp.linalg.norm(true_total))
+    assert rel < 0.02
+
+
+def test_compression_ratio():
+    g = {"w": jnp.zeros((1 << 16,))}
+    st_ = comp.stats(g)
+    assert st_.ratio > 3.5   # ~4x for fp32 -> int8 + scales
+
+
+# ---------------------------------------------------------------------------
+# elastic / straggler
+# ---------------------------------------------------------------------------
+
+def test_shrink_data_axis():
+    assert shrink_data_axis(240, 16) == (15, 16)
+    with pytest.raises(ValueError):
+        shrink_data_axis(8, 16)
+
+
+def test_reshard_plan():
+    plan = reshard_plan((16, 16), 240)
+    assert plan["new"] == {"data": 15, "model": 16}
+    assert plan["chips_lost"] == 16
+    assert np.isclose(plan["global_batch_scale"], 15 / 16)
+
+
+def test_watchdog_flags_straggler():
+    wd = StragglerWatchdog(warmup_steps=5, z_threshold=3.0, patience=2)
+    flagged = []
+    for step in range(30):
+        dur = 0.1 + 0.001 * (step % 3)
+        if step in (20, 21, 22):
+            dur = 1.5
+        flagged.append(wd.observe(step, dur))
+    assert flagged[20] and flagged[21]
+    assert wd.should_escalate or flagged[22]
+    assert not any(flagged[6:20])
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = opt_mod.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                              total_steps=200, grad_clip=10.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt_mod.init(params)
+    for _ in range(150):
+        grads = {"x": 2.0 * params["x"]}    # d/dx x^2
+        params, state, _ = opt_mod.apply(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.2
+
+
+def test_grad_clip_and_lr_schedule():
+    cfg = opt_mod.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(opt_mod.lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert np.isclose(float(opt_mod.lr_at(cfg, jnp.asarray(10))), 1e-3,
+                      rtol=1e-3)
+    assert float(opt_mod.lr_at(cfg, jnp.asarray(100))) < 2e-4
+    g = {"x": jnp.asarray([3.0, 4.0])}     # norm 5
+    clipped, norm = opt_mod.clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(norm), 5.0)
+    assert np.isclose(float(jnp.linalg.norm(clipped["x"])), 1.0)

@@ -1,0 +1,100 @@
+"""Lower one dry-run cell and print top dot / collective contributions.
+
+Usage: PYTHONPATH=src python tools/debug_cell.py <arch> <shape> [single|multi]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+from repro.launch import dryrun
+from repro.distributed import hlo_analysis as H
+
+arch, shape = sys.argv[1], sys.argv[2]
+mesh_name = sys.argv[3] if len(sys.argv) > 3 else "single"
+
+# reuse lower_cell internals by monkeypatching to capture hlo
+import repro.configs as C
+from repro.models.registry import bundle_for
+from repro.distributed import sharding
+from repro.launch import steps as steps_mod, mesh as mesh_mod
+from repro.training import optimizer as opt_mod
+from repro.training.optimizer import AdamWConfig
+import numpy as np
+
+spec = C.input_specs(arch, shape)
+cfg = C.get(arch)
+bundle = bundle_for(cfg)
+mesh = mesh_mod.make_production_mesh(multi_pod=(mesh_name == "multi"))
+axes = sharding.Axes.for_mesh(mesh)
+sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+msize = sizes.get(axes.model, 1)
+dsize = int(np.prod([sizes[a] for a in axes.data]))
+nd = lambda t: sharding.named(mesh, t)
+p_specs = sharding.param_pspecs(bundle, axes, msize)
+params_sds = bundle.abstract_params()
+with jax.set_mesh(mesh):
+    if spec.kind == "train":
+        opt_sds = jax.eval_shape(opt_mod.init, params_sds)
+        o_specs = sharding.opt_pspecs(bundle, axes, msize)
+        in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+        step = steps_mod.make_train_step(bundle, AdamWConfig())
+        lowered = jax.jit(step, in_shardings=(nd(p_specs), nd(o_specs), nd(in_specs)),
+                          out_shardings=(nd(p_specs), nd(o_specs), None)).lower(params_sds, opt_sds, spec.inputs)
+    elif spec.kind == "prefill":
+        in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+        prefix = getattr(cfg, "num_prefix_embeddings", 0)
+        clen = spec.seq_len + prefix
+        step = steps_mod.make_prefill_step(bundle, cache_len=clen)
+        cache_sds = jax.eval_shape(lambda: bundle.init_cache(spec.batch, clen))
+        c_specs = sharding.cache_pspecs(bundle, cache_sds, axes, mesh)
+        def pstep(params, inputs): return step(params, **inputs)
+        lowered = jax.jit(pstep, in_shardings=(nd(p_specs), nd(in_specs)),
+                          out_shardings=(None, nd(c_specs))).lower(params_sds, spec.inputs)
+    else:
+        cache_sds = jax.eval_shape(lambda: bundle.init_cache(spec.batch, spec.seq_len))
+        c_specs = sharding.cache_pspecs(bundle, cache_sds, axes, mesh)
+        in_specs = sharding.input_pspecs(spec.inputs, axes, dsize)
+        step = steps_mod.make_serve_step(bundle)
+        lowered = jax.jit(step, in_shardings=(nd(p_specs), nd(c_specs), nd(in_specs["token"]), nd(in_specs["pos"])),
+                          out_shardings=(None, nd(c_specs))).lower(params_sds, cache_sds, spec.inputs["token"], spec.inputs["pos"])
+    compiled = lowered.compile()
+
+hlo = compiled.as_text()
+out = f"/tmp/{arch.replace('/','_')}_{shape}_{mesh_name}_hlo.txt"
+open(out, "w").write(hlo)
+print("hlo saved:", out)
+comps = H.split_computations(hlo)
+mult = H._multipliers(comps)
+dots, colls = [], []
+for name, comp in comps.items():
+    m = mult.get(name, 0.0)
+    if m <= 0: continue
+    for line in comp.lines:
+        om = H._OP_DEF.match(line)
+        if not om: continue
+        rhs = om.group(2)
+        o = H._parse_shape(rhs)
+        if " dot(" in rhs or rhs.startswith("dot("):
+            dm = H._DOT.search(rhs)
+            ops = [x.strip().lstrip("%") for x in dm.group(1).split(",")]
+            lhs = comp.shapes.get(ops[0]); k = 1
+            cm = H._CONTRACT.search(rhs)
+            if lhs and cm and cm.group(1).strip():
+                for idx in cm.group(1).split(","):
+                    i = int(idx)
+                    if i < len(lhs[1]): k *= lhs[1][i]
+            n = 1
+            for d in o[1]: n *= d
+            dots.append((m*2.0*n*k, f"{o[0]}{list(o[1])} k={k} m={m}", name[:45]))
+        else:
+            from repro.distributed import collectives as CM
+            for kind in ("all-gather","all-reduce","reduce-scatter","all-to-all","collective-permute"):
+                if f" {kind}(" in rhs or f"{kind}-start(" in rhs:
+                    for op in CM.parse_collectives(om.group(0), 16):
+                        colls.append((m*op.wire_bytes, f"{op.kind} {op.dtype}{list(op.shape)} g={op.group_size} m={m}", name[:45]))
+                    break
+dots.sort(reverse=True); colls.sort(reverse=True)
+print(f"\nTOP DOTS (total {sum(d[0] for d in dots):.3e} flops):")
+for fl, desc, nm in dots[:12]: print(f"  {fl:.3e} {desc} [{nm}]")
+print(f"\nTOP COLLECTIVES (total {sum(c[0] for c in colls):.3e} wire bytes):")
+for wb, desc, nm in colls[:14]: print(f"  {wb:.3e} {desc} [{nm}]")

@@ -1,0 +1,29 @@
+"""Inject the generated roofline/perf tables into EXPERIMENTS.md at the
+<!-- ROOFLINE_TABLE --> / <!-- PERF_TABLE --> markers."""
+import io
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def table(kind: str) -> str:
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "make_tables.py"), kind],
+        capture_output=True, text=True, check=True, cwd=ROOT)
+    return out.stdout.strip()
+
+
+def main() -> None:
+    p = ROOT / "EXPERIMENTS.md"
+    s = p.read_text()
+    s = s.replace("<!-- ROOFLINE_TABLE -->",
+                  table("roofline") + "\n\n" + table("multi"))
+    s = s.replace("<!-- PERF_TABLE -->", table("perf"))
+    p.write_text(s)
+    print("EXPERIMENTS.md tables injected")
+
+
+if __name__ == "__main__":
+    main()

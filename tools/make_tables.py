@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md tables from results/dryrun/*.json.
+
+Usage: python tools/make_tables.py [roofline|multi|perf]
+"""
+import glob
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load():
+    return [json.loads(Path(f).read_text())
+            for f in sorted(glob.glob(str(RESULTS / "*.json")))]
+
+
+def roofline_table():
+    recs = [r for r in load() if r.get("mesh") == "single"
+            and not r.get("tag")]
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| useful | HBM/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | *skipped* "
+                  f"| — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rf = r["roofline"]
+        u = rf["useful_flops_ratio"]
+        hbm = (r["hbm_analytic"]["param_bytes_per_dev"]
+               + r["hbm_analytic"]["opt_bytes_per_dev"]) / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.2e} "
+              f"| {rf['memory_s']:.2e} | {rf['collective_s']:.2e} "
+              f"| **{rf['dominant']}** | {u and round(u, 2)} "
+              f"| {hbm:.2f} GiB |")
+
+
+def multi_table():
+    recs = [r for r in load() if r.get("mesh") == "multi"
+            and not r.get("tag")]
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    sk = sum(1 for r in recs if r["status"] == "skipped")
+    print(f"multi-pod (2x16x16 = 512 chips): {ok} compiled ok, {sk} "
+          f"documented skips, {len(recs)-ok-sk} errors")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "ok":
+            print(f"  {r['arch']:24s} {r['shape']:12s} ok "
+                  f"({r['compile_s']:.0f}s compile, dom="
+                  f"{r['roofline']['dominant']})")
+
+
+def perf_table():
+    recs = [r for r in load() if r.get("tag")]
+    print("| tag | arch x shape | compute s | memory s | collective s "
+          "| dominant |")
+    print("|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: r["tag"]):
+        if r["status"] != "ok":
+            print(f"| {r['tag']} | {r['arch']} x {r['shape']} | ERROR | | | |")
+            continue
+        rf = r["roofline"]
+        print(f"| {r['tag']} | {r['arch']} x {r['shape']} "
+              f"| {rf['compute_s']:.2e} | {rf['memory_s']:.2e} "
+              f"| {rf['collective_s']:.2e} | {rf['dominant']} |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    {"roofline": roofline_table, "multi": multi_table,
+     "perf": perf_table}[which]()
