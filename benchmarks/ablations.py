@@ -11,8 +11,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, timed
-from repro.core import arms, baselines, controller, cost, priors
-from repro.serving import energy, simulator
+from repro.core import baselines, controller, cost, priors
+from repro.platform import make_env, make_space
+from repro.serving import energy
 
 SEEDS = 6
 ROUNDS = 49
@@ -20,9 +21,10 @@ ROUNDS = 49
 
 def _run_policy(policy_fn, work):
     board = energy.JETSON_AGX_ORIN
-    space = arms.paper_arm_space()
+    env_name = f"jetson/{work.name}/landscape"
+    space = make_space(env_name)
     cm = cost.CostModel(alpha=0.5)
-    env0 = simulator.LandscapeEnv(board, work, noise=0.03)
+    env0 = make_env(env_name, noise=0.03)
     e_ref, l_ref = env0.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
@@ -31,8 +33,8 @@ def _run_policy(policy_fn, work):
     for seed in range(SEEDS):
         ctrl = controller.Controller(space, policy_fn(space, work, board),
                                      cm, optimal_cost=opt_cost, seed=seed)
-        r = ctrl.run(simulator.LandscapeEnv(board, work, noise=0.03,
-                                            seed=seed), ROUNDS).summary()
+        r = ctrl.run(make_env(env_name, noise=0.03, seed=seed),
+                     ROUNDS).summary()
         costs.append(r["cost"])
         regrets.append(r["cum_regret"])
     return float(np.mean(costs)), float(np.mean(regrets))

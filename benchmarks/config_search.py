@@ -11,8 +11,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Row, timed
-from repro.core import arms, baselines, controller, cost, priors
-from repro.serving import energy, simulator
+from repro.core import baselines, controller, cost, priors
+from repro.platform import make_env, make_space
+from repro.serving import energy
 
 N_SEEDS = 8
 ROUNDS = 49
@@ -20,9 +21,10 @@ ROUNDS = 49
 
 def _one_model(work):
     board = energy.JETSON_AGX_ORIN
-    space = arms.paper_arm_space()
+    env_name = f"jetson/{work.name}/landscape"
+    space = make_space(env_name)
     cm = cost.CostModel(alpha=0.5)
-    env0 = simulator.LandscapeEnv(board, work, noise=0.03)
+    env0 = make_env(env_name, noise=0.03)
     e_ref, l_ref = env0.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
@@ -37,13 +39,12 @@ def _one_model(work):
             space, baselines.make_policy("camel", prior_mu=mu0,
                                          prior_sigma=sig0),
             cm, optimal_cost=opt_cost, seed=seed)
-        r1c = c1.run(simulator.LandscapeEnv(board, work, noise=0.03,
-                                            seed=seed), ROUNDS)
+        r1c = c1.run(make_env(env_name, noise=0.03, seed=seed), ROUNDS)
         r1 = r1c.summary()
         c2 = controller.Controller(space, baselines.make_policy("grid"),
                                    cm, optimal_cost=opt_cost, seed=seed)
-        r2 = c2.run(simulator.LandscapeEnv(board, work, noise=0.03,
-                                           seed=seed), ROUNDS).summary()
+        r2 = c2.run(make_env(env_name, noise=0.03, seed=seed),
+                    ROUNDS).summary()
         agg["cost"].append(1 - r1["cost"] / r2["cost"])
         agg["edp"].append(1 - r1["edp"] / r2["edp"])
         agg["energy"].append(1 - r1["energy_per_req"]

@@ -1,7 +1,10 @@
 """E1 — paper Fig. 1: the 49-configuration (frequency x batch) landscape.
 
 Reports the optimum location, the cost at the paper's labeled corner
-configs, and the normalized-cost extremes, per edge model.
+configs, and the normalized-cost extremes, per edge model.  Evaluated
+through the environment registry's batched `pull_many` hook on a
+noise-free landscape env (identical numbers to the closed forms in
+`serving.energy`).
 """
 
 from __future__ import annotations
@@ -10,20 +13,24 @@ import numpy as np
 
 from benchmarks.common import Row, timed
 from repro.core.arms import PAPER_BATCH_SIZES
+from repro.platform import make_env, make_space, pull_many
 from repro.serving import energy
 
 
-def _landscape(work):
-    board = energy.JETSON_AGX_ORIN
-    E, L = energy.landscape(board, work, PAPER_BATCH_SIZES, 1.0, 2500)
+def _landscape(name):
+    env = make_env(f"jetson/{name}/landscape", noise=0.0)
+    space = make_space(f"jetson/{name}/landscape")
+    obs = pull_many(env, [knobs for _, knobs in space.enumerate()])
+    E = np.array([o.energy for o in obs]).reshape(space.shape)
+    L = np.array([o.latency for o in obs]).reshape(space.shape)
     c = 0.5 * E / E[-1, -1] + 0.5 * L / L[-1, -1]
-    return board, E, L, c
+    return env.board, E, L, c
 
 
 def run() -> list:
     rows: list[Row] = []
     for name, work in energy.ORIN_WORKLOADS.items():
-        (board, E, L, c), us = timed(_landscape, work)
+        (board, E, L, c), us = timed(_landscape, name)
         i, j = np.unravel_index(np.argmin(c), c.shape)
         opt = f"({board.freqs_mhz[i]}MHz b={PAPER_BATCH_SIZES[j]})"
         rows.append((f"landscape_{name}_optimum", us,

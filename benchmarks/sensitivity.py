@@ -1,5 +1,6 @@
 """E5 — paper Figs. 7-10: alpha / arrival-interval / token-length
-sensitivity + the waiting-vs-batching latency split."""
+sensitivity + the waiting-vs-batching latency split (decomposed via the
+shared queueing model in `repro.platform.telemetry`)."""
 
 from __future__ import annotations
 
@@ -7,6 +8,7 @@ import numpy as np
 
 from benchmarks.common import Row, timed
 from repro.core.arms import PAPER_BATCH_SIZES
+from repro.platform import queue_wait
 from repro.serving import energy
 
 BOARD = energy.JETSON_AGX_ORIN
@@ -58,7 +60,7 @@ def run() -> list:
     for f, b in ((930.75, 28), (306.0, 28), (930.75, 4), (816.0, 20)):
         lvl = BOARD.level_of(f)
         tb = LLAMA.batch_time(BOARD, lvl, b)
-        wait = (b - 1) / 2.0
+        wait = queue_wait(b, arrival_rate=1.0)
         rows.append((f"sensitivity_split_{f:.0f}MHz_b{b}", 0.0,
                      f"wait={wait:.1f}s batch={tb:.2f}s"))
     return rows

@@ -45,13 +45,13 @@ def run() -> list:
     # Beyond-paper: elastic mesh-slice knob.  Under light load Camel
     # should power DOWN extra slices (energy/request scales with width);
     # under heavy load it needs them (saturation).
-    from repro.core import arms as arms_mod
     from repro.core import baselines, controller, cost
-    from repro.serving import simulator as sim_mod
-    space = arms_mod.tpu_elastic_arm_space(slice_widths=(1, 2, 4))
+    from repro.platform import make_env, make_space
+    elastic_name = "tpu-v5e/qwen2-1.5b/elastic"
+    space = make_space(elastic_name, slice_widths=(1, 2, 4))
     for interval, label in ((1.0, "light_load"), (2e-4, "heavy_load")):
-        env = sim_mod.TPUElasticEnv(chip, model, arrival_rate=1.0 / interval,
-                                    noise=0.02, seed=0)
+        env = make_env(elastic_name, arrival_rate=1.0 / interval,
+                       noise=0.02, seed=0)
         cm = cost.CostModel(alpha=0.5)
         e_ref, l_ref = env.expected(space.values(space.corner()))
         cm = cm.with_reference(e_ref, l_ref)

@@ -1,6 +1,10 @@
 """E4 — paper Fig. 4: the found optimum vs. the three default corners,
 event-driven serving of 2500 requests (alpaca-scale).
 
+The optimum comes from the registry-built noise-free landscape env
+(`validate_mode` uses `make_env("jetson/<model>/landscape")`); serving
+replays the trace through `EventDrivenServer`.
+
 Paper reference: EDP reduced 29.94%/12.46% vs (max f, max b) and
 51.35%/46.34% vs (min f, max b) for llama/qwen.
 """

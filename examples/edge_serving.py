@@ -1,6 +1,7 @@
 """End-to-end edge serving (paper Fig. 2 loop, Results 2): event-driven
 server over 2500 uniform-arrival requests, Camel's optimum vs. the three
-default corners, reporting energy / latency / EDP / cost.
+default corners, reporting energy / latency / EDP / cost.  The optimum is
+found on the registry-built "jetson/<model>/landscape" environment.
 
     PYTHONPATH=src python examples/edge_serving.py [--model qwen2.5-3b]
 """

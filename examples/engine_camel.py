@@ -1,7 +1,8 @@
 """Camel driving the REAL JAX inference engine (reduced model on CPU):
 each bandit pull actually serves a batch of prompts through prefill +
 greedy decode; energy comes from the board power model at the arm's
-frequency level.
+frequency level.  The backend is the registry's "engine/<arch>"
+environment, returning full `Observation` telemetry per pull.
 
     PYTHONPATH=src python examples/engine_camel.py --rounds 12
 """

@@ -1,18 +1,22 @@
 """Quickstart: Camel's Thompson-sampling configuration search on the
 calibrated Jetson AGX Orin + Llama3.2-1B landscape (paper Results 1).
 
+The environment is constructed by name through the `repro.platform`
+registry; swap the name (e.g. "tpu-v5e/qwen2-1.5b/landscape") to search
+any other backend with the same loop.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import arms, baselines, controller, cost, priors
-from repro.serving import energy, simulator
+from repro.core import baselines, controller, cost, priors
+from repro.platform import make_env, make_space
+from repro.serving import energy
 
 
 def main() -> None:
-    board = energy.JETSON_AGX_ORIN
-    work = energy.ORIN_WORKLOADS["llama3.2-1b"]
-    space = arms.paper_arm_space()                # 7 freqs x 7 batches
-    env = simulator.LandscapeEnv(board, work, noise=0.03, seed=0)
+    name = "jetson/llama3.2-1b/landscape"
+    env = make_env(name, noise=0.03, seed=0)
+    space = make_space(name)                      # 7 freqs x 7 batches
 
     # Cost normalization at (max f, max b), as in the paper.
     cm = cost.CostModel(alpha=0.5)
@@ -23,6 +27,8 @@ def main() -> None:
     print(f"true optimum: {space.values(opt_arm)} (cost {opt_cost:.4f})")
 
     # Structured prior: coarse physics + one probe batch (DESIGN.md SS1).
+    board = energy.JETSON_AGX_ORIN
+    work = energy.ORIN_WORKLOADS["llama3.2-1b"]
     probe_tb = work.batch_time(board, board.n_levels - 1, 4)
     mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, probe_batch=4)
     camel = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
@@ -36,6 +42,9 @@ def main() -> None:
     counts = result.arm_counts(space.n_arms)
     print(f"explored {int((counts > 0).sum())}/49 arms "
           f"(grid search explores all 49)")
+    print(f"telemetry: mean power {s['mean_power_w']:.1f}W, "
+          f"mean batch time {s['mean_batch_time_s']:.2f}s, "
+          f"{s['saturated_rounds']} saturated rounds")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@
 
 Structural result: decode is HBM-bound, so the optimum sits at a LOW perf
 state — the opposite of the compute-bound Jetson — and Camel discovers it
-online.
+online.  The backend is the registry's "tpu-v5e/<arch>/landscape"
+environment ("tpu-v5e/<arch>/elastic" adds the mesh-slice knob).
 
     PYTHONPATH=src python examples/tpu_serving.py --arch qwen2-1.5b
 """

@@ -1,7 +1,9 @@
 """Search baselines: grid search (paper's comparison), UCB1, epsilon-greedy,
 random.  All share the bandit interface: select(state, key) -> arm,
-update(state, arm, cost) -> state, so the controller/simulator can swap
-policies.
+update(state, arm, cost) -> state, so the controller can swap policies.
+Policies only ever see scalar costs — the controller reduces each
+environment `Observation` (energy, latency) through the CostModel, keeping
+every policy backend-agnostic across the `repro.platform` registry.
 """
 
 from __future__ import annotations

@@ -1,7 +1,11 @@
 """Online controller: the MAIN loop of Algorithm 1, decoupled from the
 environment.  The environment is anything that maps an arm's knob values to
-an observed (energy/request, latency/request) pair — the analytical
-simulator, the event-driven serving simulator, or a real engine.
+an observed `platform.Observation` (energy/request, latency/request, plus
+batch/queueing/power telemetry) — the analytical simulator, the
+event-driven serving simulator, the TPU roofline environments, or a real
+engine.  Construct any of them by name via `repro.platform.make_env`.
+Environments may still return a bare ``(energy, latency)`` pair; the
+controller coerces it.
 """
 
 from __future__ import annotations
@@ -16,13 +20,14 @@ import numpy as np
 
 from repro.core.arms import ArmSpace
 from repro.core.cost import CostModel, RegretTracker, summarize_run
+from repro.platform.telemetry import Observation
 
 
 class Environment(Protocol):
-    """Pull an arm; observe per-request energy (J) and latency (s)."""
+    """Pull an arm; observe the resulting per-request telemetry."""
 
     def pull(self, knobs: Dict[str, object], round_index: int
-             ) -> Tuple[float, float]: ...
+             ) -> Observation: ...
 
 
 @dataclasses.dataclass
@@ -34,6 +39,7 @@ class RoundRecord:
     latency: float
     cost: float
     regret: float
+    obs: Optional[Observation] = None
 
 
 @dataclasses.dataclass
@@ -53,6 +59,15 @@ class ControllerResult:
             self.cum_regret) else 0.0
         out["best_arm"] = self.best_arm
         out["best_knobs"] = dict(self.best_knobs)
+        obs = [r.obs for r in self.records if r.obs is not None]
+        if obs:
+            out["mean_power_w"] = float(np.mean([o.power for o in obs]))
+            out["mean_batch_time_s"] = float(np.mean(
+                [o.batch_time for o in obs]))
+            out["mean_queue_wait_s"] = float(np.mean(
+                [o.queue_wait for o in obs]))
+            out["saturated_rounds"] = int(sum(o.backlog > 0 for o in obs))
+            out["total_tokens"] = int(sum(o.tokens for o in obs))
         return out
 
     def arm_counts(self, n_arms: int) -> np.ndarray:
@@ -66,7 +81,7 @@ class Controller:
     """Runs `policy` against `env` for T rounds (Alg. 1 MAIN).
 
     The controller owns cost computation (Eq. 1 via CostModel) and regret
-    accounting; the environment only reports raw (energy, latency).
+    accounting; the environment only reports observed telemetry.
     """
 
     def __init__(self, space: ArmSpace, policy, cost_model: CostModel,
@@ -87,14 +102,15 @@ class Controller:
             self.key, sub = jax.random.split(self.key)
             arm = int(self.policy.select(state, sub, jnp.asarray(t + 1)))
             knobs = self.space.values(arm)
-            energy, latency = env.pull(knobs, t)
-            cost = float(self.cost_model.cost(energy, latency))
+            obs = Observation.of(env.pull(knobs, t))
+            cost = float(self.cost_model.cost(obs.energy, obs.latency))
             state = self.policy.update(state, jnp.asarray(arm),
                                        jnp.asarray(cost, jnp.float32))
             r = regret.record(cost) if self.optimal_cost is not None else 0.0
             records.append(RoundRecord(t=t, arm=arm, knobs=knobs,
-                                       energy=energy, latency=latency,
-                                       cost=cost, regret=float(r)))
+                                       energy=obs.energy,
+                                       latency=obs.latency,
+                                       cost=cost, regret=float(r), obs=obs))
 
         best_arm = self._commit(state, records)
         return ControllerResult(
@@ -117,10 +133,12 @@ class Controller:
         return int(np.argmin(m))
 
 
-def landscape_optimal(space: ArmSpace, env_expected: Callable[[Dict], Tuple[float, float]],
+def landscape_optimal(space: ArmSpace,
+                      env_expected: Callable[[Dict], Observation],
                       cost_model: CostModel) -> Tuple[int, float]:
     """Exhaustively evaluate the noise-free landscape to find the optimal arm
-    and its cost (used to seed RegretTracker, and for Fig. 1)."""
+    and its cost (used to seed RegretTracker, and for Fig. 1).
+    `env_expected` may return an Observation or an (energy, latency) pair."""
     best_arm, best_cost = -1, float("inf")
     for arm, knobs in space.enumerate():
         e, l = env_expected(knobs)

@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.arms import ArmSpace
+from repro.platform.telemetry import queueing_latency
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,9 +79,7 @@ def analytic_cost_prior(
         factor = ph.kappa + (1.0 - ph.kappa) * f_max / f
         tb = t_unit * (ph.c0_units + b) * factor
         E[arm] = p * tb / b
-        n_batches = int(np.ceil(n_requests / b))
-        backlog = max(0.0, tb - b / arrival_rate) * (n_batches - 1) / 2.0
-        L[arm] = (b - 1) / (2.0 * arrival_rate) + tb + backlog
+        L[arm] = queueing_latency(tb, b, arrival_rate, n_requests).total
 
     ref = space.corner()  # (max f, max b)
     chat = alpha * E / E[ref] + (1.0 - alpha) * L / L[ref]

@@ -1,0 +1,12 @@
+"""Pallas-TPU symbol compatibility across jax releases.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels target the new name but must still import (and run in interpret
+mode) on older jax.  Resolve the class once here.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # jax <= 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 DEFAULT_BLOCK_KV = 512
 _NEG = -1e30
 
@@ -109,7 +111,7 @@ def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
         functools.partial(_decode_kernel, scale=scale, block_kv=block_kv),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kvh, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qt, kt, vt)

@@ -88,7 +88,7 @@ def lower_cell(arch: str, shape: str, mesh_name: str,
     nd = lambda tree: sharding.named(mesh, tree)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_mod.activate(mesh):
         if spec.kind == "train":
             opt_cfg = AdamWConfig()
             opt_sds = jax.eval_shape(opt_mod.init, params_sds)

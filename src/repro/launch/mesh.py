@@ -13,18 +13,25 @@ import jax
 import numpy as np
 
 
+def _axis_types_kwargs(n_axes: int) -> dict:
+    """`axis_types` only exists on newer jax; older versions (<=0.4.x) treat
+    every axis as auto-sharded already, so omit the kwarg there."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (elastic reshapes, tests on small host counts)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -32,8 +39,17 @@ def make_host_mesh(model_parallel: int = 1):
     n = jax.device_count()
     assert n % model_parallel == 0
     return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         ("data", "model"), **_axis_types_kwargs(2))
+
+
+def activate(mesh):
+    """Context manager entering `mesh`: `jax.set_mesh` on new jax, the Mesh
+    object's own context on older versions (NamedSharding-based jit works
+    under either)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def describe(mesh) -> str:

@@ -1,5 +1,9 @@
 """Serving driver: the paper's full loop (Fig. 2) end to end.
 
+All backends are constructed through the `repro.platform` registry
+(`make_env` / `make_space`), so each mode is just: name an environment,
+normalize the cost model at the reference corner, run the controller.
+
 Modes:
   --mode search    Camel vs. grid configuration search on the calibrated
                    Jetson landscapes (paper Results 1)
@@ -21,30 +25,26 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-import numpy as np
-
-import repro.configs as configs_mod
-from repro.core import arms, baselines, controller, cost, priors
-from repro.models.registry import bundle_for
+from repro.core import baselines, controller, cost, priors
+from repro.platform import make_env, make_space
 from repro.serving import energy as energy_mod
 from repro.serving import simulator as sim_mod
-from repro.serving.engine import EngineEnvironment, InferenceEngine
 from repro.serving.requests import ArrivalProcess
 
 
 def search_mode(model: str, rounds: int, alpha: float, seed: int,
                 policy_name: str = "camel") -> dict:
-    board = energy_mod.JETSON_AGX_ORIN
-    work = energy_mod.ORIN_WORKLOADS[model]
-    space = arms.paper_arm_space()
-    env = sim_mod.LandscapeEnv(board, work, noise=0.03, seed=seed)
+    name = f"jetson/{model}/landscape"
+    env = make_env(name, noise=0.03, seed=seed)
+    space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e_ref, l_ref = env.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
 
     if policy_name == "camel":
+        board = energy_mod.JETSON_AGX_ORIN
+        work = energy_mod.ORIN_WORKLOADS[model]
         probe_tb = work.batch_time(board, board.n_levels - 1, 4)
         mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, 4,
                                                alpha=alpha)
@@ -64,15 +64,16 @@ def search_mode(model: str, rounds: int, alpha: float, seed: int,
 
 def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
                   ) -> dict:
-    board = energy_mod.JETSON_AGX_ORIN
-    work = energy_mod.ORIN_WORKLOADS[model]
-    space = arms.paper_arm_space()
-    env = sim_mod.LandscapeEnv(board, work, noise=0.0)
+    name = f"jetson/{model}/landscape"
+    env = make_env(name, noise=0.0)
+    space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e_ref, l_ref = env.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, _ = controller.landscape_optimal(space, env.expected, cm)
 
+    board = energy_mod.JETSON_AGX_ORIN
+    work = energy_mod.ORIN_WORKLOADS[model]
     configs = {
         "camel_optimal": space.values(opt_arm),
         "maxf_minb": space.values(space.corner(batch="min")),
@@ -80,7 +81,7 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
         "minf_maxb": space.values(space.corner(freq_mhz="min")),
     }
     out = {}
-    for name, knobs in configs.items():
+    for cname, knobs in configs.items():
         server = sim_mod.EventDrivenServer(
             board, work, ArrivalProcess(interval_s=1.0, seed=seed),
             n_requests, noise=0.02, seed=seed)
@@ -89,23 +90,17 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
         s = res.summary()
         s["knobs"] = knobs
         s["cost"] = float(cm.cost(s["energy_per_req"], s["latency_per_req"]))
-        out[name] = s
+        out[cname] = s
     base = out["maxf_maxb"]["edp"]
-    for name in configs:
-        out[name]["edp_vs_maxf_maxb"] = 1.0 - out[name]["edp"] / base
+    for cname in configs:
+        out[cname]["edp_vs_maxf_maxb"] = 1.0 - out[cname]["edp"] / base
     return out
 
 
 def engine_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
-    cfg = configs_mod.get_smoke(arch)
-    bundle = bundle_for(cfg)
-    params = bundle.init_params(jax.random.PRNGKey(seed))
-    engine = InferenceEngine(bundle, params, max_batch=28, max_seq_len=128)
-    board = energy_mod.JETSON_AGX_ORIN
-    work = energy_mod.ORIN_WORKLOADS["llama3.2-1b"]
-    env = EngineEnvironment(engine, board, work, prompt_len=16,
-                            max_new_tokens=8, seed=seed)
-    space = arms.paper_arm_space()
+    name = f"engine/{arch}"
+    env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8)
+    space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e0, l0 = env.pull(space.values(space.corner()), 0)
     cm = cm.with_reference(e0, l0)
@@ -116,16 +111,9 @@ def engine_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
 
 
 def tpu_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
-    cfg = configs_mod.get(arch)
-    bundle = bundle_for(cfg)
-    kv_bytes = 2.0 * 2 * getattr(cfg, "n_kv_heads", 8) \
-        * getattr(cfg, "head_dim", 128) * getattr(cfg, "n_layers", 32)
-    model = energy_mod.tpu_workload_from_config(
-        arch, bundle.n_params, bundle.n_active_params, kv_bytes,
-        model_shards=16)
-    chip = energy_mod.TPUChip()
-    env = sim_mod.TPULandscapeEnv(chip, model, noise=0.03, seed=seed)
-    space = arms.tpu_arm_space()
+    name = f"tpu-v5e/{arch}/landscape"
+    env = make_env(name, noise=0.03, seed=seed)
+    space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e_ref, l_ref = env.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)

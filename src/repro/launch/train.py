@@ -74,7 +74,7 @@ def run_training(arch: str, *, smoke: bool = True, steps: int = 20,
                                              every_steps=ckpt_every)
         manager.install_signal_handler()
 
-    with jax.set_mesh(mesh):
+    with mesh_mod.activate(mesh):
         jitted = jax.jit(step_fn,
                          in_shardings=(nd(p_specs), nd(o_specs),
                                        nd(in_specs)),

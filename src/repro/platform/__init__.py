@@ -1,0 +1,29 @@
+"""repro.platform — the single contract between the Camel controller and
+every hardware backend.
+
+* `Platform` + `DVFSPlatform` / `TPUPlatform` adapters (base.py): one
+  hardware abstraction (levels, power, set_level) for Jetson boards and
+  TPU chips alike.
+* `Observation` + `queueing_latency` (telemetry.py): the rich per-pull
+  record every environment returns and the one shared queueing-latency
+  model.
+* `make_env` / `make_space` / `pull_many` (registry.py): construct any
+  backend by name, e.g. ``make_env("jetson/llama3.2-1b/landscape")``.
+
+See docs/ENVIRONMENTS.md for the full contract and how to add a backend.
+"""
+
+from repro.platform.base import (BaseEnvironment, DVFSPlatform, Platform,
+                                 TPUPlatform, as_platform)
+from repro.platform.registry import (available_envs, make_env, make_space,
+                                     parse_name, pull_many, register_env)
+from repro.platform.telemetry import (Observation, QueueingLatency, observe,
+                                      queue_wait, queueing_latency,
+                                      saturation_backlog)
+
+__all__ = [
+    "BaseEnvironment", "DVFSPlatform", "Platform", "TPUPlatform",
+    "as_platform", "available_envs", "make_env", "make_space", "parse_name",
+    "pull_many", "register_env", "Observation", "QueueingLatency", "observe",
+    "queue_wait", "queueing_latency", "saturation_backlog",
+]

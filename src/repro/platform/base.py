@@ -1,0 +1,149 @@
+"""The `Platform` contract: one hardware abstraction for every backend.
+
+The Camel loop is hardware-agnostic — a policy maps an arm (level, batch)
+to an observed (energy, latency).  What differs per backend is how levels
+map to clocks and power.  `Platform` pins that seam down:
+
+* `levels` — the knob values the arm space enumerates (DVFS frequencies in
+  MHz on a Jetson board, relative perf states on a TPU chip);
+* `power(level, util)` — mean watts at a level and utilization;
+* `set_level(level)` — actuate the level (simulation adapters record it; a
+  real deployment writes the devfreq sysfs node / perf-state API here).
+
+`DVFSPlatform` and `TPUPlatform` adapt the two existing hardware types
+(`serving.energy.DVFSBoard`, `serving.energy.TPUChip`) onto the contract
+without this package importing `repro.serving` (the adapters duck-type, so
+there is no import cycle and third-party boards plug in the same way).
+"""
+
+from __future__ import annotations
+
+from typing import List, Protocol, Sequence, Tuple, runtime_checkable
+
+from repro.platform.telemetry import Observation
+
+
+@runtime_checkable
+class Platform(Protocol):
+    """Frequency/perf-level hardware abstraction."""
+
+    @property
+    def name(self) -> str: ...
+
+    @property
+    def knob_name(self) -> str:
+        """Arm-space knob this platform's levels populate
+        (e.g. 'freq_mhz', 'perf_state')."""
+        ...
+
+    @property
+    def levels(self) -> Tuple[float, ...]: ...
+
+    @property
+    def n_levels(self) -> int: ...
+
+    def level_of(self, value) -> int: ...
+
+    def power(self, level: int, util: float = 1.0) -> float: ...
+
+    def set_level(self, level: int) -> None: ...
+
+
+class _LevelMixin:
+    """Shared level bookkeeping for the concrete adapters."""
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def level_of(self, value) -> int:
+        for i, v in enumerate(self.levels):
+            if abs(float(v) - float(value)) < 1e-6:
+                return i
+        raise ValueError(f"{value!r} is not a level of {self.name}; "
+                         f"have {tuple(self.levels)}")
+
+    def set_level(self, level: int) -> None:
+        if not 0 <= int(level) < self.n_levels:
+            raise ValueError(f"level {level} out of range "
+                             f"[0, {self.n_levels}) for {self.name}")
+        self.current_level = int(level)
+
+
+class DVFSPlatform(_LevelMixin):
+    """Adapter: a DVFS board (e.g. `serving.energy.DVFSBoard`) as a
+    Platform.  Levels are the board's DVFS frequencies in MHz."""
+
+    knob_name = "freq_mhz"
+
+    def __init__(self, board):
+        self.board = board
+        self.current_level = board.n_levels - 1
+
+    @property
+    def name(self) -> str:
+        return self.board.name
+
+    @property
+    def levels(self) -> Tuple[float, ...]:
+        return tuple(self.board.freqs_mhz)
+
+    def power(self, level: int, util: float = 1.0) -> float:
+        return self.board.power(level, util)
+
+
+class TPUPlatform(_LevelMixin):
+    """Adapter: a TPU chip (e.g. `serving.energy.TPUChip`) as a Platform.
+    Levels are relative perf states.  The chip's power model needs the
+    workload's compute share (its memory system does not scale with core
+    clock); callers set `compute_share` from the roofline, defaulting to a
+    balanced split."""
+
+    knob_name = "perf_state"
+
+    def __init__(self, chip, compute_share: float = 0.5):
+        self.chip = chip
+        self.compute_share = float(compute_share)
+        self.current_level = len(chip.perf_states) - 1
+
+    @property
+    def name(self) -> str:
+        return self.chip.name
+
+    @property
+    def levels(self) -> Tuple[float, ...]:
+        return tuple(self.chip.perf_states)
+
+    def power(self, level: int, util: float = 1.0) -> float:
+        return self.chip.power(self.chip.perf_states[level],
+                               self.compute_share, util)
+
+
+def as_platform(hw) -> Platform:
+    """Wrap a raw hardware profile in its Platform adapter (idempotent)."""
+    if isinstance(hw, (DVFSPlatform, TPUPlatform)):
+        return hw
+    if hasattr(hw, "freqs_mhz"):
+        return DVFSPlatform(hw)
+    if hasattr(hw, "perf_states"):
+        return TPUPlatform(hw)
+    if isinstance(hw, Platform):
+        return hw
+    raise TypeError(f"cannot adapt {type(hw).__name__} to Platform")
+
+
+class BaseEnvironment:
+    """Optional base class for environments: carries the `platform` handle
+    and supplies the sequential `pull_many` fallback of the batched-
+    evaluation hook (async/sharded controllers and the registry's
+    `pull_many` call it; vectorized backends override it)."""
+
+    platform: Platform = None
+
+    def pull(self, knobs, round_index: int) -> Observation:
+        raise NotImplementedError
+
+    def pull_many(self, knobs_list: Sequence[dict], round_index: int = 0
+                  ) -> List[Observation]:
+        return [Observation.of(self.pull(k, round_index + i))
+                for i, k in enumerate(knobs_list)]

@@ -1,0 +1,196 @@
+"""Environment registry: construct any Camel backend by name.
+
+Names follow ``<platform>/<model>/<scenario>``:
+
+    jetson/llama3.2-1b/landscape     closed-form Jetson landscape + noise
+    jetson/qwen2.5-3b/events         event-driven simulation per pull
+    tpu-v5e/qwen2-1.5b/landscape     roofline-derived TPU decode landscape
+    tpu-v5e/qwen2-1.5b/elastic       + mesh-slice width third knob
+    engine/smollm-360m               real InferenceEngine (scenario "live"
+                                     implied; "engine/<arch>/live" also ok)
+
+`make_env` returns the environment; `make_space` the matching ArmSpace;
+`pull_many` evaluates a batch of knob dicts through an environment's
+batched hook (or the sequential fallback).  Builders take keyword
+overrides (noise=, seed=, arrival_rate=, ...) which pass straight through
+to the environment constructor, so benchmarks and examples construct any
+backend by name without importing its module.
+
+New backends register with `register_env("myboard", "landscape")` and are
+immediately constructible everywhere — the bandit core never changes.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+from repro.core.arms import (paper_arm_space, tpu_arm_space,
+                             tpu_elastic_arm_space)
+from repro.platform.telemetry import Observation
+
+# (platform, scenario) -> builder(model, **overrides) -> Environment
+_BUILDERS: Dict[Tuple[str, str], Callable] = {}
+
+# (platform, scenario) -> space builder(**overrides) -> ArmSpace
+_SPACES: Dict[Tuple[str, str], Callable] = {}
+
+#: Platforms whose names may omit the scenario ("engine/<arch>").
+_DEFAULT_SCENARIO = {"engine": "live"}
+
+
+def register_env(platform: str, scenario: str, space: Callable = None):
+    """Decorator registering an environment builder (and optionally the
+    matching arm-space builder) under (platform, scenario)."""
+    def deco(fn):
+        _BUILDERS[(platform, scenario)] = fn
+        if space is not None:
+            _SPACES[(platform, scenario)] = space
+        return fn
+    return deco
+
+
+def parse_name(name: str) -> Tuple[str, str, str]:
+    parts = name.split("/")
+    if len(parts) == 2:
+        platform, model = parts
+        scenario = _DEFAULT_SCENARIO.get(platform)
+        if scenario is None:
+            raise KeyError(
+                f"environment name {name!r} omits the scenario and platform "
+                f"{platform!r} has no default; use "
+                "'<platform>/<model>/<scenario>'")
+    elif len(parts) == 3:
+        platform, model, scenario = parts
+    else:
+        raise KeyError(f"environment name must be "
+                       f"'<platform>/<model>/<scenario>', got {name!r}")
+    return platform, model, scenario
+
+
+def _builder(name: str) -> Tuple[Callable, str, Tuple[str, str]]:
+    platform, model, scenario = parse_name(name)
+    try:
+        return _BUILDERS[(platform, scenario)], model, (platform, scenario)
+    except KeyError:
+        raise KeyError(f"no environment {platform!r}/{scenario!r}; "
+                       f"available: {available_envs()}") from None
+
+
+def make_env(name: str, **overrides):
+    """Construct the environment `name` with constructor overrides."""
+    builder, model, _ = _builder(name)
+    return builder(model, **overrides)
+
+
+def make_space(name: str, **overrides):
+    """The ArmSpace matching environment `name` (same grid the paper uses
+    for the platform, plus any extra knobs the scenario adds)."""
+    platform, _, scenario = parse_name(name)
+    try:
+        builder = _SPACES[(platform, scenario)]
+    except KeyError:
+        raise KeyError(f"no arm space for {platform!r}/{scenario!r}; "
+                       f"available: {available_envs()}") from None
+    return builder(**overrides)
+
+
+def available_envs() -> Tuple[str, ...]:
+    return tuple(sorted(f"{p}/<model>/{s}" for p, s in _BUILDERS))
+
+
+def pull_many(env, knobs_list: Sequence[dict], round_index: int = 0
+              ) -> List[Observation]:
+    """Batched-evaluation hook: use the environment's own `pull_many` when
+    it has one, else pull sequentially.  Always returns Observations."""
+    fn = getattr(env, "pull_many", None)
+    if fn is not None:
+        return [Observation.of(o) for o in fn(knobs_list, round_index)]
+    return [Observation.of(env.pull(k, round_index + i))
+            for i, k in enumerate(knobs_list)]
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends (imports deferred so `import repro.platform` stays light
+# and cycle-free; the heavy deps load only when a backend is constructed)
+# ---------------------------------------------------------------------------
+
+
+def _orin_workload(model: str):
+    from repro.serving import energy
+    try:
+        return energy.JETSON_AGX_ORIN, energy.ORIN_WORKLOADS[model]
+    except KeyError:
+        raise KeyError(f"unknown jetson model {model!r}; "
+                       f"have {sorted(energy.ORIN_WORKLOADS)}") from None
+
+
+@register_env("jetson", "landscape", space=paper_arm_space)
+def _jetson_landscape(model: str, **kw):
+    from repro.serving import simulator
+    board, work = _orin_workload(model)
+    return simulator.LandscapeEnv(board, work, **kw)
+
+
+@register_env("jetson", "events", space=paper_arm_space)
+def _jetson_events(model: str, **kw):
+    from repro.serving import simulator
+    board, work = _orin_workload(model)
+    return simulator.EventEnvironment(board, work, **kw)
+
+
+def _tpu_profile(arch: str, model_shards: int):
+    import repro.configs as configs_mod
+    from repro.models.registry import bundle_for
+    from repro.serving import energy
+    try:
+        cfg = configs_mod.get(arch)
+    except ModuleNotFoundError:
+        raise KeyError(f"unknown TPU model {arch!r}; see repro.configs "
+                       "for available architectures") from None
+    bundle = bundle_for(cfg)
+    kv_bytes = 2.0 * 2 * getattr(cfg, "n_kv_heads", 8) \
+        * getattr(cfg, "head_dim", 128) * getattr(cfg, "n_layers", 32)
+    model = energy.tpu_workload_from_config(
+        arch, bundle.n_params, bundle.n_active_params, kv_bytes,
+        model_shards=model_shards)
+    return energy.TPUChip(), model
+
+
+@register_env("tpu-v5e", "landscape", space=tpu_arm_space)
+def _tpu_landscape(model: str, *, model_shards: int = 16, **kw):
+    from repro.serving import simulator
+    chip, served = _tpu_profile(model, model_shards)
+    return simulator.TPULandscapeEnv(chip, served, **kw)
+
+
+@register_env("tpu-v5e", "elastic", space=tpu_elastic_arm_space)
+def _tpu_elastic(model: str, *, model_shards: int = 16, **kw):
+    from repro.serving import simulator
+    chip, served = _tpu_profile(model, model_shards)
+    return simulator.TPUElasticEnv(chip, served, **kw)
+
+
+@register_env("engine", "live", space=paper_arm_space)
+def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
+                 max_seq_len: int = 128, prompt_len: int = 16,
+                 max_new_tokens: int = 8, arrival_rate: float = 1.0):
+    import jax
+    import repro.configs as configs_mod
+    from repro.models.registry import bundle_for
+    from repro.serving import energy
+    from repro.serving.engine import EngineEnvironment, InferenceEngine
+    try:
+        cfg = configs_mod.get_smoke(arch)
+    except ModuleNotFoundError:
+        raise KeyError(f"unknown engine model {arch!r}; see repro.configs "
+                       "for available architectures") from None
+    bundle = bundle_for(cfg)
+    params = bundle.init_params(jax.random.PRNGKey(seed))
+    engine = InferenceEngine(bundle, params, max_batch=max_batch,
+                             max_seq_len=max_seq_len)
+    board = energy.JETSON_AGX_ORIN
+    work = energy.ORIN_WORKLOADS["llama3.2-1b"]
+    return EngineEnvironment(engine, board, work,
+                             arrival_rate=arrival_rate,
+                             prompt_len=prompt_len,
+                             max_new_tokens=max_new_tokens, seed=seed)

@@ -1,4 +1,6 @@
 """Serving substrate: arrivals, batching, energy models, simulators and the
-JAX inference engine."""
+JAX inference engine.  Environments implement the `repro.platform` contract
+(`pull` -> Observation) and are constructible by name via
+`repro.platform.make_env`."""
 
 from repro.serving import energy, queueing, requests, simulator  # noqa: F401

@@ -51,6 +51,8 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.platform.telemetry import queueing_latency
+
 # ---------------------------------------------------------------------------
 # Device profiles
 # ---------------------------------------------------------------------------
@@ -136,12 +138,10 @@ def energy_per_request(board: DVFSBoard, work: WorkloadModel, level: int,
 def mean_latency(board: DVFSBoard, work: WorkloadModel, level: int,
                  batch: int, arrival_rate: float, n_requests: int,
                  work_scale: float = 1.0) -> float:
-    """Eq. 7 + saturation backlog over a finite horizon (see module doc)."""
+    """Eq. 7 + saturation backlog over a finite horizon (shared model in
+    platform.telemetry; see module doc for the derivation)."""
     tb = work.batch_time(board, level, batch, work_scale)
-    n_batches = int(np.ceil(n_requests / batch))
-    wait = (batch - 1) / (2.0 * arrival_rate)
-    backlog = max(0.0, tb - batch / arrival_rate) * (n_batches - 1) / 2.0
-    return wait + tb + backlog
+    return queueing_latency(tb, batch, arrival_rate, n_requests).total
 
 
 def landscape(board: DVFSBoard, work: WorkloadModel,
@@ -314,8 +314,6 @@ def tpu_decode_landscape(chip: TPUChip, model: TPUServedModel,
             tb = step_s * tokens_out          # batch service time
             p = chip.power(ps, share, util=1.0)
             E[i, j] = p * tb / b
-            n_batches = int(np.ceil(n_requests / b))
-            wait = (b - 1) / (2.0 * arrival_rate)
-            backlog = max(0.0, tb - b / arrival_rate) * (n_batches - 1) / 2.0
-            L[i, j] = wait + tb + backlog
+            L[i, j] = queueing_latency(tb, int(b), arrival_rate,
+                                       n_requests).total
     return E, L

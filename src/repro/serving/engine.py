@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import ModelBundle
+from repro.platform import BaseEnvironment, DVFSPlatform, Observation, observe
 
 
 @dataclasses.dataclass
@@ -92,13 +93,13 @@ class InferenceEngine:
                                 tokens_out=b * max_new_tokens)
 
 
-class EngineEnvironment:
+class EngineEnvironment(BaseEnvironment):
     """Camel Environment backed by the real engine: pulling an arm serves
     one batch of synthetic prompts at that batch size and converts measured
-    wall time into (energy, latency) via the analytical board power model
+    wall time into an `Observation` via the analytical board power model
     at the arm's frequency level (CPU stand-in for the on-board power
     monitor; on a Jetson/TPU deployment this is replaced by the power
-    rail/perf-state telemetry)."""
+    rail/perf-state telemetry).  Registry name: "engine/<arch>"."""
 
     def __init__(self, engine: InferenceEngine, board, work,
                  arrival_rate: float = 1.0, prompt_len: int = 32,
@@ -106,14 +107,16 @@ class EngineEnvironment:
         self.engine = engine
         self.board = board
         self.work = work
+        self.platform = DVFSPlatform(board)
         self.arrival_rate = arrival_rate
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
         self.rng = np.random.default_rng(seed)
 
-    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
+    def pull(self, knobs: Dict, round_index: int) -> Observation:
         batch = int(knobs["batch"])
-        level = self.board.level_of(float(knobs["freq_mhz"]))
+        level = self.platform.level_of(knobs["freq_mhz"])
+        self.platform.set_level(level)
         vocab = self.engine.bundle.cfg.vocab_size
         prompts = [self.rng.integers(1, vocab, size=self.prompt_len)
                    .astype(np.int32) for _ in range(batch)]
@@ -124,6 +127,10 @@ class EngineEnvironment:
             / self.work.freq_factor(self.board, self.board.n_levels - 1)
         t_batch = st.total_s * factor
         p = self.board.power(level, self.work.utilization(batch))
-        energy = p * t_batch / batch
-        wait = (batch - 1) / (2.0 * self.arrival_rate)
-        return energy, wait + t_batch
+        # Single-batch horizon (n_requests = batch): no saturation backlog —
+        # a live pull measures one batch, it cannot observe queue growth.
+        return observe(p, t_batch, batch, self.arrival_rate,
+                       n_requests=batch, tokens=st.tokens_out,
+                       metadata={"backend": "engine",
+                                 "prefill_s": st.prefill_s,
+                                 "decode_s": st.decode_s})

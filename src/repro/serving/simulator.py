@@ -1,17 +1,28 @@
 """Serving environments for the Camel controller.
 
-Two levels of fidelity:
+All environments implement the `repro.platform` contract: `pull` returns a
+rich `Observation` (energy/request, latency decomposition, mean power,
+tokens) computed through the one shared queueing-latency model, and each
+carries a `platform` adapter unifying the hardware types.  Construct them
+by name via `repro.platform.make_env` ("jetson/llama3.2-1b/landscape",
+"jetson/.../events", "tpu-v5e/.../landscape", "tpu-v5e/.../elastic").
 
-* `LandscapeEnv` — closed-form expected (E, L) per arm + observation noise.
-  This is the paper's *configuration search* setting (Results 1): both Camel
-  and grid search replay identical data points round by round.
+Three levels of fidelity:
 
-* `EventDrivenServer` — discrete-event simulation: requests arrive over
-  time, a FIFO batcher accumulates them, the server processes batches
-  sequentially; the controller may re-tune (frequency, batch) between
-  batches.  Queue backlog, saturation and drift all emerge naturally.  This
-  is the paper's *validation* setting (Results 2), and also what a real
-  engine integration replaces.
+* `LandscapeEnv` / `TPULandscapeEnv` / `TPUElasticEnv` — closed-form
+  expected Observation per arm + multiplicative observation noise.  This is
+  the paper's *configuration search* setting (Results 1): both Camel and
+  grid search replay identical data points round by round.
+
+* `EventEnvironment` — each pull replays a short arrival trace through the
+  discrete-event server at the pulled config and reports the *measured*
+  telemetry.  Queueing and saturation emerge instead of being closed-form.
+
+* `EventDrivenServer` — the underlying discrete-event simulation: requests
+  arrive over time, a FIFO batcher accumulates them, the server processes
+  batches sequentially; the controller may re-tune (frequency, batch)
+  between batches.  This is the paper's *validation* setting (Results 2),
+  and also what a real engine integration replaces.
 """
 
 from __future__ import annotations
@@ -22,19 +33,19 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.arms import ArmSpace
-from repro.core.controller import Environment
-from repro.serving import energy as energy_mod
+from repro.platform import (BaseEnvironment, DVFSPlatform, Observation,
+                            TPUPlatform, observe)
 from repro.serving.energy import DVFSBoard, WorkloadModel
 from repro.serving.queueing import FIFOBatcher
 from repro.serving.requests import ArrivalProcess, Request
 
 
 # ---------------------------------------------------------------------------
-# Closed-form environment (configuration search experiments)
+# Closed-form environments (configuration search experiments)
 # ---------------------------------------------------------------------------
 
 
-class LandscapeEnv(Environment):
+class LandscapeEnv(BaseEnvironment):
     """Expected landscape + multiplicative lognormal noise.
 
     Knobs: {'freq_mhz': level value, 'batch': int}.
@@ -46,43 +57,45 @@ class LandscapeEnv(Environment):
                  work_scale: float = 1.0):
         self.board = board
         self.work = work
+        self.platform = DVFSPlatform(board)
         self.arrival_rate = arrival_rate
         self.n_requests = n_requests
         self.noise = noise
         self.rng = np.random.default_rng(seed)
         self.work_scale = work_scale
 
-    def expected(self, knobs: Dict) -> Tuple[float, float]:
-        level = self.board.level_of(float(knobs["freq_mhz"]))
+    def expected(self, knobs: Dict) -> Observation:
+        level = self.platform.level_of(knobs["freq_mhz"])
         b = int(knobs["batch"])
-        e = energy_mod.energy_per_request(self.board, self.work, level, b,
-                                          self.work_scale)
-        l = energy_mod.mean_latency(self.board, self.work, level, b,
-                                    self.arrival_rate, self.n_requests,
-                                    self.work_scale)
-        return e, l
+        p = self.board.power(level, self.work.utilization(b))
+        tb = self.work.batch_time(self.board, level, b, self.work_scale)
+        return observe(p, tb, b, self.arrival_rate, self.n_requests,
+                       tokens=b * self.work.tokens_out,
+                       metadata={"backend": "jetson-landscape",
+                                 "level": level})
 
-    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
-        e, l = self.expected(knobs)
+    def pull(self, knobs: Dict, round_index: int) -> Observation:
+        self.platform.set_level(self.platform.level_of(knobs["freq_mhz"]))
+        obs = self.expected(knobs)
         if self.noise > 0:
-            e *= float(np.exp(self.noise * self.rng.standard_normal()))
-            l *= float(np.exp(self.noise * self.rng.standard_normal()))
-        return e, l
+            obs = obs.scaled(
+                float(np.exp(self.noise * self.rng.standard_normal())),
+                float(np.exp(self.noise * self.rng.standard_normal())))
+        return obs
 
 
-class TPULandscapeEnv(Environment):
+class TPULandscapeEnv(BaseEnvironment):
     """TPU v5e serving environment (DESIGN.md SS3 adaptation).
 
     Knobs: {'perf_state': float, 'batch': int}.
     """
 
-    def __init__(self, chip: energy_mod.TPUChip,
-                 model: energy_mod.TPUServedModel,
-                 tokens_out: int = 70, prompt_len: float = 256.0,
-                 arrival_rate: float = 1.0, n_requests: int = 2500,
-                 noise: float = 0.03, seed: int = 0):
+    def __init__(self, chip, model, tokens_out: int = 70,
+                 prompt_len: float = 256.0, arrival_rate: float = 1.0,
+                 n_requests: int = 2500, noise: float = 0.03, seed: int = 0):
         self.chip = chip
         self.model = model
+        self.platform = TPUPlatform(chip)
         self.tokens_out = tokens_out
         self.prompt_len = prompt_len
         self.arrival_rate = arrival_rate
@@ -90,25 +103,33 @@ class TPULandscapeEnv(Environment):
         self.noise = noise
         self.rng = np.random.default_rng(seed)
 
-    def expected(self, knobs: Dict) -> Tuple[float, float]:
+    def _batch_power_time(self, knobs: Dict) -> Tuple[float, float, int]:
+        """(power_per_slice, batch_time, batch) at the pulled arm; updates
+        the platform's compute share from the roofline."""
         ps = float(knobs["perf_state"])
         b = int(knobs["batch"])
         ctx = self.prompt_len + self.tokens_out / 2.0
         step_s, share = self.model.step_time(self.chip, ps, b, ctx)
+        self.platform.compute_share = share
         tb = step_s * self.tokens_out
         p = self.chip.power(ps, share)
-        e = p * tb / b
-        n_batches = int(np.ceil(self.n_requests / b))
-        wait = (b - 1) / (2.0 * self.arrival_rate)
-        backlog = max(0.0, tb - b / self.arrival_rate) * (n_batches - 1) / 2.0
-        return e, wait + tb + backlog
+        return p, tb, b
 
-    def pull(self, knobs: Dict, round_index: int) -> Tuple[float, float]:
-        e, l = self.expected(knobs)
+    def expected(self, knobs: Dict) -> Observation:
+        p, tb, b = self._batch_power_time(knobs)
+        return observe(p, tb, b, self.arrival_rate, self.n_requests,
+                       tokens=b * self.tokens_out,
+                       metadata={"backend": "tpu-landscape",
+                                 "compute_share": self.platform.compute_share})
+
+    def pull(self, knobs: Dict, round_index: int) -> Observation:
+        self.platform.set_level(self.platform.level_of(knobs["perf_state"]))
+        obs = self.expected(knobs)
         if self.noise > 0:
-            e *= float(np.exp(self.noise * self.rng.standard_normal()))
-            l *= float(np.exp(self.noise * self.rng.standard_normal()))
-        return e, l
+            obs = obs.scaled(
+                float(np.exp(self.noise * self.rng.standard_normal())),
+                float(np.exp(self.noise * self.rng.standard_normal())))
+        return obs
 
 
 class TPUElasticEnv(TPULandscapeEnv):
@@ -118,21 +139,12 @@ class TPUElasticEnv(TPULandscapeEnv):
     but burn idle+dynamic power on every active chip — energy per request
     scales with slices / throughput."""
 
-    def expected(self, knobs: Dict) -> Tuple[float, float]:
-        ps = float(knobs["perf_state"])
-        b = int(knobs["batch"])
+    def expected(self, knobs: Dict) -> Observation:
+        p, tb, b = self._batch_power_time(knobs)
         w = int(knobs.get("slice_width", 1))
-        ctx = self.prompt_len + self.tokens_out / 2.0
-        step_s, share = self.model.step_time(self.chip, ps, b, ctx)
-        tb = step_s * self.tokens_out
-        p = self.chip.power(ps, share) * w        # w replica groups powered
-        e = p * tb / (b * w)                      # each serves 1/w batches
-        n_batches = int(np.ceil(self.n_requests / b))
-        wait = (b - 1) / (2.0 * self.arrival_rate)
-        # w slices drain the queue w-fold faster:
-        backlog = max(0.0, tb / w - b / self.arrival_rate) \
-            * (n_batches - 1) / 2.0
-        return e, wait + tb + backlog
+        return observe(p * w, tb, b, self.arrival_rate, self.n_requests,
+                       n_servers=w, tokens=b * self.tokens_out,
+                       metadata={"backend": "tpu-elastic", "slice_width": w})
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +157,7 @@ class BatchStats:
     bid: int
     size: int
     freq_mhz: float
+    ready_s: float
     start_s: float
     finish_s: float
     batch_time_s: float
@@ -176,7 +189,10 @@ class EventDrivenServer:
 
     `tuner(batch_index, server)` -> {'freq_mhz': ..., 'batch': ...} is called
     before each batch is formed; pass a constant dict for fixed-config
-    validation, or wrap a bandit policy for online Camel.
+    validation, or an `OnlineCamelTuner` for online Camel.  If the tuner
+    exposes an `observe(energy, latency)` method the server feeds each
+    batch's measured stats back after processing it — the closed loop of
+    the paper's Fig. 2.
     """
 
     def __init__(self, board: DVFSBoard, work: WorkloadModel,
@@ -197,6 +213,7 @@ class EventDrivenServer:
         lat: List[float] = []
         en: List[float] = []
         bi = 0
+        feedback = getattr(tuner, "observe", None)
 
         while pending or len(batcher):
             knobs = tuner(bi, self)
@@ -228,16 +245,19 @@ class EventDrivenServer:
             finish = start + tb
             server_free_at = finish
             e_req = p * tb / batch.size
+            mean_lat = float(np.mean(
+                [finish - r.arrival_s for r in batch.requests]))
 
             for r in batch.requests:
                 lat.append(finish - r.arrival_s)
                 en.append(e_req)
             batches.append(BatchStats(
                 bid=batch.bid, size=batch.size,
-                freq_mhz=self.board.freqs_mhz[level], start_s=start,
-                finish_s=finish, batch_time_s=tb, energy_per_req=e_req,
-                mean_latency_s=float(np.mean(
-                    [finish - r.arrival_s for r in batch.requests]))))
+                freq_mhz=self.board.freqs_mhz[level], ready_s=batch.ready_s,
+                start_s=start, finish_s=finish, batch_time_s=tb,
+                energy_per_req=e_req, mean_latency_s=mean_lat))
+            if feedback is not None:
+                feedback(e_req, mean_lat)
             bi += 1
 
         return ServeResult(batches=batches,
@@ -255,10 +275,67 @@ def fixed_config_tuner(freq_mhz: float, batch: int):
     return lambda bi, server: knobs
 
 
+class EventEnvironment(BaseEnvironment):
+    """Pull-style adapter over the event-driven simulator: each pull serves
+    a short arrival trace at the pulled (frequency, batch) config and
+    reports the measured telemetry as an Observation.  Same contract as
+    `LandscapeEnv`, but queue wait and saturation backlog *emerge* from the
+    discrete-event loop rather than from the closed form — this is the
+    registry's "jetson/<model>/events" scenario.
+    """
+
+    def __init__(self, board: DVFSBoard, work: WorkloadModel,
+                 interval_s: float = 1.0, requests_per_pull: int = 120,
+                 noise: float = 0.02, seed: int = 0):
+        self.board = board
+        self.work = work
+        self.platform = DVFSPlatform(board)
+        self.interval_s = interval_s
+        self.requests_per_pull = requests_per_pull
+        self.noise = noise
+        self.seed = seed
+
+    def pull(self, knobs: Dict, round_index: int) -> Observation:
+        level = self.platform.level_of(knobs["freq_mhz"])
+        self.platform.set_level(level)
+        b = int(knobs["batch"])
+        trace_seed = self.seed + round_index
+        server = EventDrivenServer(
+            self.board, self.work,
+            ArrivalProcess(interval_s=self.interval_s, seed=trace_seed),
+            self.requests_per_pull, noise=self.noise, seed=trace_seed)
+        res = server.run(fixed_config_tuner(float(knobs["freq_mhz"]), b))
+        s = res.summary()
+        # Exact per-request latency decomposition from the trace:
+        # finish - arrival = (ready - arrival) + (start - ready) + t_batch,
+        # so the request-weighted means satisfy latency = wait + backlog + bt
+        # and backlog > 0 only when the server actually delayed batches.
+        sizes = np.array([bs.size for bs in res.batches], dtype=float)
+        weights = sizes / sizes.sum() if len(sizes) else sizes
+        bt = float(np.dot(weights,
+                          [bs.batch_time_s for bs in res.batches]))
+        backlog = float(np.dot(weights,
+                               [bs.start_s - bs.ready_s
+                                for bs in res.batches]))
+        return Observation(
+            energy=s["energy_per_req"],
+            latency=s["latency_per_req"],
+            batch_time=bt,
+            queue_wait=s["latency_per_req"] - bt - backlog,
+            backlog=backlog,
+            power=self.board.power(level, self.work.utilization(b)),
+            batch=b,
+            tokens=s["n_requests"] * self.work.tokens_out,
+            metadata={"backend": "jetson-events",
+                      "n_batches": len(res.batches),
+                      "p99_latency": s["p99_latency"]})
+
+
 class OnlineCamelTuner:
-    """Wraps a bandit policy as an EventDrivenServer tuner: updates the
-    posterior with the observed cost of the previous batch before choosing
-    the next arm.  This is the full closed loop of Fig. 2."""
+    """Wraps a bandit policy as an EventDrivenServer tuner.  The server
+    calls `observe` with each processed batch's measured (energy, latency),
+    updating the posterior before the next arm is chosen — the full closed
+    loop of Fig. 2."""
 
     def __init__(self, space: ArmSpace, policy, cost_model, seed: int = 0):
         import jax
@@ -282,8 +359,6 @@ class OnlineCamelTuner:
         self._observations.append((self._last_arm, cost))
 
     def __call__(self, bi: int, server) -> Dict:
-        # Feed back the previous batch's stats (available on the server's
-        # last BatchStats via closure users; simplest: users call observe()).
         self.key, sub = self._jax.random.split(self.key)
         arm = int(self.policy.select(self.state, sub,
                                      self._jax.numpy.asarray(bi + 1)))

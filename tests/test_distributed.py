@@ -127,7 +127,7 @@ def test_small_mesh_compile_subprocess():
                   "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
         i = sharding.input_pspecs(inputs, axes, 4)
         step = steps_mod.make_train_step(bundle, AdamWConfig())
-        with jax.set_mesh(mesh):
+        with mesh_mod.activate(mesh):
             compiled = jax.jit(step, in_shardings=(nd(p), nd(o), nd(i)),
                                out_shardings=(nd(p), nd(o), None)).lower(
                 params, opt, inputs).compile()

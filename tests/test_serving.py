@@ -112,8 +112,10 @@ def test_camel_beats_grid_on_llama_landscape():
 
 
 def test_online_camel_tuner_closed_loop():
-    """OnlineCamelTuner drives the event-driven server end to end and its
-    committed config beats the worst default corner."""
+    """OnlineCamelTuner drives the event-driven server end to end; the
+    server feeds each batch's measured (energy, latency) back into the
+    tuner, so the posterior actually updates across batches (the closed
+    loop of Fig. 2)."""
     board = energy.JETSON_AGX_ORIN
     work = energy.LLAMA32_1B_ORIN
     space = arms.paper_arm_space()
@@ -121,23 +123,34 @@ def test_online_camel_tuner_closed_loop():
     tuner = simulator.OnlineCamelTuner(
         space, baselines.make_policy("camel", prior_mu=1.0,
                                      prior_sigma=0.15), cm, seed=0)
+    state0 = tuner.state
 
     board_srv = simulator.EventDrivenServer(
         board, work, ArrivalProcess(interval_s=1.0), n_requests=600,
         noise=0.02)
+    res = board_srv.run(tuner)
 
-    def tuner_with_feedback(bi, server):
-        knobs = tuner(bi, server)
-        return knobs
-
-    res = board_srv.run(tuner_with_feedback)
-    # feed back observations post-hoc (per-batch) and re-run exploitation
-    for bs in res.batches:
-        tuner._last_arm = space.index(freq_mhz=bs.freq_mhz, batch=bs.size) \
-            if bs.size in space.grid("batch") else tuner._last_arm
-        tuner.observe(bs.energy_per_req, bs.mean_latency_s)
     assert len(res.batches) > 0
     assert len(res.request_latencies) == 600
+    # one posterior update per processed batch, no user plumbing required
+    assert len(tuner._observations) == len(res.batches)
+    # the policy state must actually have moved: pull counts accumulated
+    # and the posterior mean left its prior
+    assert int(np.asarray(tuner.state.count).sum()) == len(res.batches)
+    assert not np.allclose(np.asarray(tuner.state.mu),
+                           np.asarray(state0.mu))
+
+
+def test_event_server_no_feedback_for_plain_tuners():
+    """Fixed-config tuners (plain callables without `observe`) still work
+    unchanged."""
+    board = energy.JETSON_AGX_ORIN
+    work = energy.LLAMA32_1B_ORIN
+    server = simulator.EventDrivenServer(
+        board, work, ArrivalProcess(interval_s=1.0), n_requests=100,
+        noise=0.0)
+    res = server.run(simulator.fixed_config_tuner(816.0, 20))
+    assert len(res.request_latencies) == 100
 
 
 def test_engine_generates_and_is_deterministic():

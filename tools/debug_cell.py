@@ -32,7 +32,7 @@ dsize = int(np.prod([sizes[a] for a in axes.data]))
 nd = lambda t: sharding.named(mesh, t)
 p_specs = sharding.param_pspecs(bundle, axes, msize)
 params_sds = bundle.abstract_params()
-with jax.set_mesh(mesh):
+with mesh_mod.activate(mesh):
     if spec.kind == "train":
         opt_sds = jax.eval_shape(opt_mod.init, params_sds)
         o_specs = sharding.opt_pspecs(bundle, axes, msize)
