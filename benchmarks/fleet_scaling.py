@@ -1,0 +1,93 @@
+"""E10 — batched-search scaling: rounds-to-converge and wall-clock vs K.
+
+For K in {1, 2, 4, 8}, run the BatchController on the noise-free Jetson
+llama3.2-1b landscape (K concurrent arms per round through the vectorized
+`pull_many` hook, one jitted evaluation per round) and measure
+
+* rounds_to_converge — the first round after which the committed arm
+  (`controller.rounds_to_converge`, the controller's own commit rule)
+  equals the landscape optimum and never leaves it;
+* wall_clock_s — the wall time of the full run.
+
+K=1 is the paper's sequential Algorithm 1; larger K trades pulls for
+rounds.  ``python -m benchmarks.fleet_scaling`` emits the full sweep as
+JSON (averaged over seeds); `run()` yields the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import baselines, controller, cost, priors
+from repro.platform import make_env, make_space
+
+KS = (1, 2, 4, 8)
+N_SEEDS = 4
+MAX_ROUNDS = {1: 60, 2: 30, 4: 16, 8: 12}
+ENV_NAME = "jetson/llama3.2-1b/landscape"
+
+
+def _setup():
+    space = make_space(ENV_NAME)
+    cm = cost.CostModel(alpha=0.5)
+    env0 = make_env(ENV_NAME, noise=0.0)
+    e_ref, l_ref = env0.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
+                                                     cm)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    return space, cm, opt_arm, opt_cost, mu0, sig0
+
+
+def sweep(seeds=range(N_SEEDS)) -> list:
+    space, cm, opt_arm, opt_cost, mu0, sig0 = _setup()
+    out = []
+    for k in KS:
+        rounds, pulls, secs, hits = [], [], [], 0
+        for seed in seeds:
+            ctrl = controller.BatchController(
+                space, baselines.make_policy("camel", prior_mu=mu0,
+                                             prior_sigma=sig0),
+                cm, optimal_cost=opt_cost, seed=seed, k=k)
+            env = make_env(ENV_NAME, noise=0.0, seed=seed)
+            t0 = time.perf_counter()
+            res = ctrl.run(env, MAX_ROUNDS[k])
+            dt = time.perf_counter() - t0
+            conv = controller.rounds_to_converge(res.records, k, opt_arm,
+                                                 mu0, space.n_arms)
+            if conv is not None:
+                hits += 1
+                rounds.append(conv)
+                pulls.append(conv * k)
+            secs.append(dt)
+        out.append({
+            "k": k,
+            "rounds_to_converge": float(np.mean(rounds)) if rounds else None,
+            "pulls_to_converge": float(np.mean(pulls)) if pulls else None,
+            "wall_clock_s": float(np.mean(secs)),
+            "converged": f"{hits}/{len(list(seeds))}",
+        })
+    return out
+
+
+def run() -> list:
+    rows: list[Row] = []
+    results = sweep()
+    base = results[0]["rounds_to_converge"]
+    for r in results:
+        conv = r["rounds_to_converge"]
+        speedup = (base / conv) if (base and conv) else float("nan")
+        rows.append((
+            f"fleet_scaling_k{r['k']}",
+            r["wall_clock_s"] * 1e6,
+            f"rounds={conv if conv is not None else 'n/a'} "
+            f"speedup={speedup:.1f}x converged={r['converged']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(json.dumps(sweep(), indent=2))

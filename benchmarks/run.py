@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
     E6 tpu_serving    DESIGN SS3  v5e adaptation landscapes + search
     E7 roofline       EXPERIMENTS SSRoofline  dry-run derived terms
     E8 kernels        kernel-vs-oracle checks + reference timings
+    E10 fleet_scaling beyond-paper  batched-TS rounds/wall-clock vs K
 """
 
 from __future__ import annotations
@@ -18,8 +19,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablations, config_search, kernels, landscape,
-                            roofline, sensitivity, tpu_serving, validation)
+    from benchmarks import (ablations, config_search, fleet_scaling, kernels,
+                            landscape, roofline, sensitivity, tpu_serving,
+                            validation)
 
     modules = [
         ("E1_landscape", landscape),
@@ -30,6 +32,7 @@ def main() -> None:
         ("E7_roofline", roofline),
         ("E8_kernels", kernels),
         ("E9_ablations", ablations),
+        ("E10_fleet_scaling", fleet_scaling),
     ]
     only = set(sys.argv[1:])
     print("name,us_per_call,derived")

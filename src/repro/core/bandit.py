@@ -31,6 +31,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -121,6 +122,51 @@ def select_arm(state: TSState, key: Array,
     return jnp.argmin(thetas)
 
 
+def sample_thetas_many(state: TSState, key: Array, k: int) -> Array:
+    """K independent posterior sample vectors, f32[k, n_arms].
+
+    Row 0 is bit-identical to `sample_thetas(state, key)`: JAX derives the
+    random bits from a flat counter, so `normal(key, (k, n))[0]` equals
+    `normal(key, (n,))` — which is what makes `select_arms(..., k=1)`
+    reproduce `select_arm` exactly.
+    """
+    eps = jax.random.normal(key, (k, state.n_arms), dtype=jnp.float32)
+    return state.mu + state.sigma2 * eps
+
+
+def select_arms(state: TSState, key: Array, k: int,
+                active_mask: Optional[Array] = None) -> Array:
+    """Batched EVAL: K arms from K independent posterior draws, *without
+    replacement* (draw j takes the argmin over arms not already selected).
+
+    This is the standard batched/delayed-feedback Thompson scheme: the
+    posterior is frozen for the round, diversity across the K slots comes
+    from the K independent theta vectors, and the without-replacement
+    constraint stops a confident posterior from spending the whole round
+    on one arm.  Returns i32[k]; requires k <= n_arms (or <= the number of
+    active arms when `active_mask` is given).
+    """
+    if not 1 <= int(k) <= state.n_arms:
+        raise ValueError(f"k must be in [1, {state.n_arms}], got {k}")
+    thetas = sample_thetas_many(state, key, int(k))
+    if active_mask is not None:
+        # Without-replacement needs k distinct *active* arms; past that
+        # point every masked row is all-inf and argmin would silently
+        # return arm 0 (possibly inactive, certainly duplicated).
+        n_active = int(np.asarray(active_mask).sum())
+        if int(k) > n_active:
+            raise ValueError(
+                f"k={k} exceeds the {n_active} active arms in the mask")
+        thetas = jnp.where(active_mask, thetas, jnp.inf)
+
+    def body(taken, th):
+        arm = jnp.argmin(jnp.where(taken, jnp.inf, th))
+        return taken.at[arm].set(True), arm
+
+    _, arms = jax.lax.scan(body, jnp.zeros((state.n_arms,), bool), thetas)
+    return arms.astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # UPDATE (Alg. 1 lines 15-18 + Eqs. 19-20)
 # ---------------------------------------------------------------------------
@@ -154,6 +200,51 @@ def update(state: TSState, arm: Array, cost: Array) -> TSState:
     # Only the pulled arm's posterior changes.
     new_mu = jnp.where(onehot, post_mu, state.mu)
     new_sigma = jnp.where(onehot, post_sigma, state.sigma2)
+    return dataclasses.replace(
+        tmp, mu=new_mu.astype(jnp.float32), sigma2=new_sigma.astype(jnp.float32))
+
+
+def update_batch(state: TSState, arms: Array, costs: Array) -> TSState:
+    """Delayed batched UPDATE: record K (arm, cost) observations at once and
+    recompute the posterior of every touched arm from its full history.
+
+    This is the masked segment-sum form of Eqs. 19-20: the K observations
+    are segment-summed into the per-arm sufficient statistics in one shot,
+    and the conjugate posterior is recomputed once for the touched arms
+    (mask: delta count > 0) instead of K times.  Because `update` already
+    rederives each arm's posterior from its *full* history against the
+    original prior, the result is bit-identical to applying `update` K
+    times in slot order whenever the K arms are distinct — the
+    without-replacement contract of `select_arms` guarantees exactly that.
+    With duplicate arms the only difference is float-addition order inside
+    a segment (last-ulp effects).
+    """
+    arms = jnp.asarray(arms, jnp.int32).reshape(-1)
+    costs = jnp.asarray(costs, jnp.float32).reshape(-1)
+    n = state.n_arms
+
+    d_count = jax.ops.segment_sum(jnp.ones_like(arms), arms, num_segments=n)
+    d_sum = jax.ops.segment_sum(costs, arms, num_segments=n)
+    d_sum2 = jax.ops.segment_sum(costs * costs, arms, num_segments=n)
+    touched = d_count > 0
+
+    count = state.count + d_count
+    sum_x = state.sum_x + d_sum
+    sum_x2 = state.sum_x2 + d_sum2
+    tmp = dataclasses.replace(state, count=count, sum_x=sum_x, sum_x2=sum_x2)
+
+    nf = count.astype(jnp.float32)
+    xbar = sum_x / jnp.maximum(nf, 1.0)
+    sigma1 = tmp.obs_std()
+    xi1 = 1.0 / (sigma1 * sigma1)
+    xi2 = 1.0 / (state.prior_sigma2 * state.prior_sigma2)
+
+    denom = nf * xi1 + xi2
+    post_mu = (nf * xi1 * xbar + state.prior_mu * xi2) / denom   # Eq. 19
+    post_sigma = jnp.sqrt(1.0 / denom)                           # Eq. 20
+
+    new_mu = jnp.where(touched, post_mu, state.mu)
+    new_sigma = jnp.where(touched, post_sigma, state.sigma2)
     return dataclasses.replace(
         tmp, mu=new_mu.astype(jnp.float32), sigma2=new_sigma.astype(jnp.float32))
 
@@ -287,6 +378,26 @@ def windowed_update(state: WindowedTSState, arm: Array, cost: Array,
     return WindowedTSState(base=newb, gamma=g)
 
 
+def windowed_update_batch(state: WindowedTSState, arms: Array, costs: Array,
+                          ) -> WindowedTSState:
+    """Delayed batched update for the windowed sampler: chains
+    `windowed_update` over the K slots in order, so the per-slot decay
+    (and its per-step count rounding) matches sequential semantics
+    bit-for-bit.  Unlike `update_batch` there is no closed segment-sum
+    form: each slot decays *all* arms' statistics before its increment, so
+    the result genuinely depends on slot order."""
+    arms = jnp.asarray(arms).reshape(-1)
+    costs = jnp.asarray(costs, jnp.float32).reshape(-1)
+    for i in range(arms.shape[0]):
+        state = windowed_update(state, arms[i], costs[i])
+    return state
+
+
 def windowed_select(state: WindowedTSState, key: Array,
                     active_mask: Optional[Array] = None) -> Array:
     return select_arm(state.base, key, active_mask)
+
+
+def windowed_select_many(state: WindowedTSState, key: Array, k: int,
+                         active_mask: Optional[Array] = None) -> Array:
+    return select_arms(state.base, key, k, active_mask)

@@ -20,6 +20,12 @@ Array = jax.Array
 
 
 class Policy(Protocol):
+    """Scalar bandit interface.  Policies may additionally expose the
+    batched pair `select_many(state, key, t, k) -> i32[k]` and
+    `update_batch(state, arms, costs) -> state` — the BatchController uses
+    them for K-wide rounds with delayed feedback and falls back to
+    repeated scalar calls otherwise."""
+
     def init(self, n_arms: int): ...
     def select(self, state, key: Array, t: Array) -> Array: ...
     def update(self, state, arm: Array, cost: Array): ...
@@ -65,6 +71,26 @@ class GridSearch:
             n_arms_=state.n_arms_,
             count=state.count + onehot.astype(jnp.int32),
             sum_x=state.sum_x + onehot * jnp.asarray(cost, jnp.float32))
+
+    def select_many(self, state: GridState, key: Array, t: Array, k: int
+                    ) -> Array:
+        """A K-wide grid round sweeps the next K arms in index order (the
+        natural batched form of the uniform sweep); after the full pass it
+        commits every slot to the empirical argmin."""
+        del key, t
+        n = state.n_arms_
+        swept = jnp.all(state.count > 0)
+        mean = state.sum_x / jnp.maximum(state.count, 1).astype(jnp.float32)
+        mean = jnp.where(state.count > 0, mean, jnp.inf)
+        sweep = (state.next_arm + jnp.arange(k, dtype=jnp.int32)) % n
+        best = jnp.full((k,), jnp.argmin(mean), jnp.int32)
+        return jnp.where(swept, best, sweep)
+
+    def update_batch(self, state: GridState, arms: Array, costs: Array
+                     ) -> GridState:
+        for a, c in zip(arms, costs):
+            state = self.update(state, a, c)
+        return state
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +204,20 @@ class CamelTS:
             return bandit.update_streaming(state, arm, cost)
         return bandit.update(state, arm, cost)
 
+    def select_many(self, state: bandit.TSState, key: Array, t: Array,
+                    k: int) -> Array:
+        del t
+        return bandit.select_arms(state, key, k)
+
+    def update_batch(self, state: bandit.TSState, arms: Array, costs: Array
+                     ) -> bandit.TSState:
+        if self.streaming:
+            for a, c in zip(arms, costs):
+                state = bandit.update_streaming(state, jnp.asarray(a),
+                                                jnp.asarray(c, jnp.float32))
+            return state
+        return bandit.update_batch(state, arms, costs)
+
 
 class CamelWindowedTS:
     """Sliding-window Camel for non-stationary workloads (beyond paper)."""
@@ -198,6 +238,13 @@ class CamelWindowedTS:
 
     def update(self, state, arm: Array, cost: Array):
         return bandit.windowed_update(state, arm, cost)
+
+    def select_many(self, state, key: Array, t: Array, k: int) -> Array:
+        del t
+        return bandit.windowed_select_many(state, key, k)
+
+    def update_batch(self, state, arms: Array, costs: Array):
+        return bandit.windowed_update_batch(state, arms, costs)
 
 
 POLICIES = {

@@ -2,16 +2,24 @@
 environment.  The environment is anything that maps an arm's knob values to
 an observed `platform.Observation` (energy/request, latency/request, plus
 batch/queueing/power telemetry) — the analytical simulator, the
-event-driven serving simulator, the TPU roofline environments, or a real
-engine.  Construct any of them by name via `repro.platform.make_env`.
-Environments may still return a bare ``(energy, latency)`` pair; the
-controller coerces it.
+event-driven serving simulator, the TPU roofline environments, a real
+engine, or a `fleet/...` composite of several devices.  Construct any of
+them by name via `repro.platform.make_env`.  Environments may still return
+a bare ``(energy, latency)`` pair; the controller coerces it.
+
+The loop is batch-first: `BatchController` selects K arms per round from
+the frozen posterior (without replacement), evaluates all K through the
+environment's batched `pull_many` hook (one vectorized/jitted evaluation
+for the landscape backends, one dispatch across devices for fleets), and
+applies a single delayed batch update.  `Controller` is the K=1 special
+case of the same loop — not a separate code path — so the paper's
+one-pull-per-round Algorithm 1 falls out as `BatchController(k=1)`
+bit-for-bit.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 import jax
@@ -32,7 +40,7 @@ class Environment(Protocol):
 
 @dataclasses.dataclass
 class RoundRecord:
-    t: int
+    t: int                          # global pull index (round * k + slot)
     arm: int
     knobs: Dict[str, object]
     energy: float
@@ -40,6 +48,8 @@ class RoundRecord:
     cost: float
     regret: float
     obs: Optional[Observation] = None
+    round: int = 0                  # batched round this pull belonged to
+    slot: int = 0                   # position within the round's K slots
 
 
 @dataclasses.dataclass
@@ -76,46 +86,100 @@ class ControllerResult:
             counts[r.arm] += 1
         return counts
 
+    @property
+    def n_rounds(self) -> int:
+        """Number of batched rounds actually run (== pull_many calls)."""
+        return self.records[-1].round + 1 if self.records else 0
 
-class Controller:
-    """Runs `policy` against `env` for T rounds (Alg. 1 MAIN).
+
+class BatchController:
+    """Runs `policy` against `env` for T batched rounds of width K
+    (Alg. 1 MAIN generalized to concurrent evaluation).
+
+    Per round: select K arms from the frozen posterior (the policy's
+    `select_many` when it has one — without replacement for Thompson
+    sampling, the next K sweep arms for grid — else K scalar selects with
+    split keys), evaluate all K slots through `repro.platform.pull_many`
+    (slot i is logical round ``t + i``; vectorized backends evaluate the
+    whole round in one jitted call), then apply ONE delayed batch update
+    (`update_batch`, falling back to K chained scalar updates).
 
     The controller owns cost computation (Eq. 1 via CostModel) and regret
-    accounting; the environment only reports observed telemetry.
+    accounting; the environment only reports observed telemetry.  With
+    k=1 every step of this loop degenerates to the sequential Algorithm 1
+    — `Controller` below is exactly that special case.
     """
 
     def __init__(self, space: ArmSpace, policy, cost_model: CostModel,
-                 optimal_cost: Optional[float] = None, seed: int = 0):
+                 optimal_cost: Optional[float] = None, seed: int = 0,
+                 k: int = 1):
+        if not 1 <= int(k) <= space.n_arms:
+            raise ValueError(f"k must be in [1, {space.n_arms}], got {k}")
         self.space = space
         self.policy = policy
         self.cost_model = cost_model
         self.optimal_cost = optimal_cost
         self.key = jax.random.PRNGKey(seed)
+        self.k = int(k)
 
     def run(self, env: Environment, n_rounds: int) -> ControllerResult:
+        from repro.platform.registry import pull_many  # lazy: import cycle
+
         state = self.policy.init(self.space.n_arms)
         regret = RegretTracker(self.optimal_cost
                                if self.optimal_cost is not None else 0.0)
         records: List[RoundRecord] = []
 
-        for t in range(n_rounds):
+        t = 0
+        for rnd in range(n_rounds):
             self.key, sub = jax.random.split(self.key)
-            arm = int(self.policy.select(state, sub, jnp.asarray(t + 1)))
-            knobs = self.space.values(arm)
-            obs = Observation.of(env.pull(knobs, t))
-            cost = float(self.cost_model.cost(obs.energy, obs.latency))
-            state = self.policy.update(state, jnp.asarray(arm),
-                                       jnp.asarray(cost, jnp.float32))
-            r = regret.record(cost) if self.optimal_cost is not None else 0.0
-            records.append(RoundRecord(t=t, arm=arm, knobs=knobs,
-                                       energy=obs.energy,
-                                       latency=obs.latency,
-                                       cost=cost, regret=float(r), obs=obs))
+            arms = self._select_round(state, sub, t)
+            knobs_list = [self.space.values(a) for a in arms]
+            obs_list = [Observation.of(o)
+                        for o in pull_many(env, knobs_list, round_index=t)]
+            costs = [float(self.cost_model.cost(o.energy, o.latency))
+                     for o in obs_list]
+            state = self._update_round(state, arms, costs)
+            for slot, (arm, knobs, obs, c) in enumerate(
+                    zip(arms, knobs_list, obs_list, costs)):
+                r = regret.record(c) if self.optimal_cost is not None else 0.0
+                records.append(RoundRecord(
+                    t=t, arm=arm, knobs=knobs, energy=obs.energy,
+                    latency=obs.latency, cost=c, regret=float(r), obs=obs,
+                    round=rnd, slot=slot))
+                t += 1
 
         best_arm = self._commit(state, records)
         return ControllerResult(
             records=records, final_state=state, best_arm=best_arm,
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
+
+    def _select_round(self, state, key, t: int) -> List[int]:
+        if self.k == 1:
+            # Scalar fast path: pass the round key straight to select so
+            # the K=1 loop reproduces the sequential controller exactly.
+            return [int(self.policy.select(state, key, jnp.asarray(t + 1)))]
+        fn = getattr(self.policy, "select_many", None)
+        if fn is not None:
+            return [int(a) for a in fn(state, key, jnp.asarray(t + 1),
+                                       self.k)]
+        # Generic fallback: K scalar selects against the frozen state with
+        # split keys.  With-replacement — duplicate slots are possible for
+        # policies without a batched form.
+        subs = jax.random.split(key, self.k)
+        return [int(self.policy.select(state, subs[i],
+                                       jnp.asarray(t + 1 + i)))
+                for i in range(self.k)]
+
+    def _update_round(self, state, arms: List[int], costs: List[float]):
+        fn = getattr(self.policy, "update_batch", None)
+        if fn is not None:
+            return fn(state, jnp.asarray(arms, jnp.int32),
+                      jnp.asarray(costs, jnp.float32))
+        for a, c in zip(arms, costs):
+            state = self.policy.update(state, jnp.asarray(a),
+                                       jnp.asarray(c, jnp.float32))
+        return state
 
     def _commit(self, state, records) -> int:
         """The deployed configuration after search: the arm with the lowest
@@ -131,6 +195,49 @@ class Controller:
         sums = np.asarray(state.sum_x)
         m = np.where(counts > 0, sums / np.maximum(counts, 1), np.inf)
         return int(np.argmin(m))
+
+
+class Controller(BatchController):
+    """The paper's sequential MAIN loop: the K=1 special case of
+    `BatchController` (same loop, one arm selected, one pull evaluated,
+    one posterior update per round)."""
+
+    def __init__(self, space: ArmSpace, policy, cost_model: CostModel,
+                 optimal_cost: Optional[float] = None, seed: int = 0):
+        super().__init__(space, policy, cost_model,
+                         optimal_cost=optimal_cost, seed=seed, k=1)
+
+
+def committed_best_history(records: List[RoundRecord], k: int,
+                           prior_mu, n_arms: int) -> List[int]:
+    """The arm the controller would commit to after each K-wide round,
+    reconstructed from the run's records with the same empirical rule as
+    `BatchController._commit` for mean-cost states (argmin of mean
+    observed cost, prior mean where unpulled).  Shared by the E10
+    benchmark and the convergence tests so the measured quantity cannot
+    drift from the controller's actual commit behavior."""
+    cnt = np.zeros(n_arms)
+    s = np.zeros(n_arms)
+    prior = np.broadcast_to(np.asarray(prior_mu, float), (n_arms,))
+    hist: List[int] = []
+    for rec in records:
+        cnt[rec.arm] += 1
+        s[rec.arm] += rec.cost
+        if rec.slot == k - 1:
+            mean = np.where(cnt > 0, s / np.maximum(cnt, 1), prior)
+            hist.append(int(np.argmin(mean)))
+    return hist
+
+
+def rounds_to_converge(records: List[RoundRecord], k: int, opt_arm: int,
+                       prior_mu, n_arms: int) -> Optional[int]:
+    """First round (1-based) after which the committed arm equals
+    `opt_arm` and never leaves it; None if the run never settles there."""
+    hist = committed_best_history(records, k, prior_mu, n_arms)
+    for i in range(len(hist)):
+        if all(b == opt_arm for b in hist[i:]):
+            return i + 1
+    return None
 
 
 def landscape_optimal(space: ArmSpace,

@@ -97,3 +97,23 @@ def flat_prior(space: ArmSpace, prior_mu: float = 1.0,
     n = space.n_arms
     return (np.full(n, prior_mu, np.float32),
             np.full(n, prior_sigma, np.float32))
+
+
+def jetson_camel_policy(model: str, space: ArmSpace, alpha: float = 0.5):
+    """The standard Camel search policy for a calibrated Orin workload:
+    CamelTS seeded with the analytic cost prior, probed with one batch at
+    (f_max, b=4) — the one recipe serve.py, the benchmarks, the examples
+    and the tests all share.
+
+    Returns (policy, prior_mu, prior_sigma); the prior vectors also feed
+    commit reconstruction (`controller.rounds_to_converge`).
+    """
+    from repro.core import baselines
+    from repro.serving import energy
+
+    board = energy.JETSON_AGX_ORIN
+    work = energy.ORIN_WORKLOADS[model]
+    probe_tb = work.batch_time(board, board.n_levels - 1, 4)
+    mu0, sig0 = analytic_cost_prior(space, probe_tb, 4, alpha=alpha)
+    policy = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    return policy, mu0, sig0

@@ -6,7 +6,9 @@ normalize the cost model at the reference corner, run the controller.
 
 Modes:
   --mode search    Camel vs. grid configuration search on the calibrated
-                   Jetson landscapes (paper Results 1)
+                   Jetson landscapes (paper Results 1); --k > 1 runs the
+                   batched controller (K concurrent arms per round through
+                   the vectorized pull_many hook)
   --mode validate  event-driven serving of N requests at the found optimal
                    vs. the three default corners (paper Results 2)
   --mode engine    Camel drives the *real* JAX engine (smoke model) —
@@ -14,16 +16,23 @@ Modes:
                    inference calls (CPU demo of the deployment loop)
   --mode tpu       Camel on the TPU v5e roofline-derived landscape
                    (DESIGN.md SS3 adaptation; per --arch)
+  --mode fleet     batched Camel over a --fleet-size device fleet behind
+                   one shared arrival queue (fleet/<n>xjetson registry
+                   platform), K = fleet size slots per round; --rounds is
+                   the pull budget in every mode
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --mode search \
         --model llama3.2-1b --rounds 49
+    PYTHONPATH=src python -m repro.launch.serve --mode fleet \
+        --model llama3.2-1b --fleet-size 4 --rounds 49
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 
 from repro.core import baselines, controller, cost, priors
 from repro.platform import make_env, make_space
@@ -33,7 +42,9 @@ from repro.serving.requests import ArrivalProcess
 
 
 def search_mode(model: str, rounds: int, alpha: float, seed: int,
-                policy_name: str = "camel") -> dict:
+                policy_name: str = "camel", k: int = 1) -> dict:
+    """`rounds` is the pull budget; with k > 1 it is served in
+    ceil(rounds / k) batched rounds of K concurrent evaluations each."""
     name = f"jetson/{model}/landscape"
     env = make_env(name, noise=0.03, seed=seed)
     space = make_space(name)
@@ -43,22 +54,19 @@ def search_mode(model: str, rounds: int, alpha: float, seed: int,
     opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
 
     if policy_name == "camel":
-        board = energy_mod.JETSON_AGX_ORIN
-        work = energy_mod.ORIN_WORKLOADS[model]
-        probe_tb = work.batch_time(board, board.n_levels - 1, 4)
-        mu0, sig0 = priors.analytic_cost_prior(space, probe_tb, 4,
-                                               alpha=alpha)
-        policy = baselines.make_policy("camel", prior_mu=mu0,
-                                       prior_sigma=sig0)
+        policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
     else:
         policy = baselines.make_policy(policy_name)
 
-    ctrl = controller.Controller(space, policy, cm, optimal_cost=opt_cost,
-                                 seed=seed)
-    res = ctrl.run(env, rounds)
+    ctrl = controller.BatchController(space, policy, cm,
+                                      optimal_cost=opt_cost, seed=seed, k=k)
+    res = ctrl.run(env, max(1, math.ceil(rounds / k)))
     summary = res.summary()
     summary["optimal_knobs"] = space.values(opt_arm)
     summary["found_optimal"] = bool(res.best_arm == opt_arm)
+    summary["k"] = k
+    summary["n_rounds"] = res.n_rounds
+    summary["n_pulls"] = len(res.records)
     return summary
 
 
@@ -127,25 +135,64 @@ def tpu_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
     return out
 
 
+def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
+               n_devices: int, k: int = 0) -> dict:
+    """Batched Camel search over an N-device fleet: K slots per round
+    (default: one per device) dispatched across the fleet's shared
+    arrival queue; one delayed posterior update per round.  `rounds` is
+    the pull budget, served in ceil(rounds / k) K-wide rounds — the same
+    semantics as every other mode."""
+    k = k if k > 0 else n_devices
+    name = f"fleet/{n_devices}xjetson/{model}/landscape"
+    env = make_env(name, noise=0.03, seed=seed)
+    space = make_space(name)
+    cm = cost.CostModel(alpha=alpha)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+
+    policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
+    ctrl = controller.BatchController(space, policy, cm,
+                                      optimal_cost=opt_cost, seed=seed, k=k)
+    res = ctrl.run(env, max(1, math.ceil(rounds / k)))
+    out = res.summary()
+    out["optimal_knobs"] = space.values(opt_arm)
+    out["found_optimal"] = bool(res.best_arm == opt_arm)
+    out["n_devices"] = n_devices
+    out["k"] = k
+    out["n_rounds"] = res.n_rounds
+    out["n_pulls"] = len(res.records)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["search", "validate", "engine",
-                                       "tpu"], default="search")
+                                       "tpu", "fleet"], default="search")
     ap.add_argument("--model", default="llama3.2-1b")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--rounds", type=int, default=49)
     ap.add_argument("--requests", type=int, default=2500)
     ap.add_argument("--alpha", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--k", type=int, default=0,
+                    help="arms evaluated concurrently per round (batched "
+                         "Thompson sampling); 0 = auto (1, or the fleet "
+                         "size in fleet mode)")
+    ap.add_argument("--fleet-size", type=int, default=4)
     args = ap.parse_args()
 
     if args.mode == "search":
-        out = search_mode(args.model, args.rounds, args.alpha, args.seed)
+        out = search_mode(args.model, args.rounds, args.alpha, args.seed,
+                          k=max(1, args.k))
     elif args.mode == "validate":
         out = validate_mode(args.model, args.requests, args.alpha,
                             args.seed)
     elif args.mode == "engine":
         out = engine_mode(args.arch, args.rounds, args.alpha, args.seed)
+    elif args.mode == "fleet":
+        out = fleet_mode(args.model, args.rounds, args.alpha, args.seed,
+                         args.fleet_size, k=args.k)
     else:
         out = tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
     print(json.dumps(out, indent=2, default=str))

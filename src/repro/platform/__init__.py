@@ -15,6 +15,7 @@ See docs/ENVIRONMENTS.md for the full contract and how to add a backend.
 
 from repro.platform.base import (BaseEnvironment, DVFSPlatform, Platform,
                                  TPUPlatform, as_platform)
+from repro.platform.fleet import FleetEnv, make_fleet, merge_observations
 from repro.platform.registry import (available_envs, make_env, make_space,
                                      parse_name, pull_many, register_env)
 from repro.platform.telemetry import (Observation, QueueingLatency, observe,
@@ -22,8 +23,9 @@ from repro.platform.telemetry import (Observation, QueueingLatency, observe,
                                       saturation_backlog)
 
 __all__ = [
-    "BaseEnvironment", "DVFSPlatform", "Platform", "TPUPlatform",
-    "as_platform", "available_envs", "make_env", "make_space", "parse_name",
-    "pull_many", "register_env", "Observation", "QueueingLatency", "observe",
-    "queue_wait", "queueing_latency", "saturation_backlog",
+    "BaseEnvironment", "DVFSPlatform", "FleetEnv", "Platform", "TPUPlatform",
+    "as_platform", "available_envs", "make_env", "make_fleet", "make_space",
+    "merge_observations", "parse_name", "pull_many", "register_env",
+    "Observation", "QueueingLatency", "observe", "queue_wait",
+    "queueing_latency", "saturation_backlog",
 ]

@@ -136,14 +136,26 @@ class BaseEnvironment:
     """Optional base class for environments: carries the `platform` handle
     and supplies the sequential `pull_many` fallback of the batched-
     evaluation hook (async/sharded controllers and the registry's
-    `pull_many` call it; vectorized backends override it)."""
+    `pull_many` call it; vectorized backends override it).
+
+    A backend whose observations do not depend on `round_index` (the
+    closed-form landscapes) sets `round_independent = True`; composite
+    dispatchers (the fleet) only hand such backends a whole slot group in
+    one vectorized call, because a group's logical rounds are generally
+    non-contiguous and cannot be expressed through the slot-i =
+    round_index + i contract."""
 
     platform: Platform = None
+    round_independent: bool = False
 
     def pull(self, knobs, round_index: int) -> Observation:
         raise NotImplementedError
 
     def pull_many(self, knobs_list: Sequence[dict], round_index: int = 0
                   ) -> List[Observation]:
+        """Sequential fallback of the batched hook.  Contract: slot i is
+        logical round ``round_index + i`` (see registry.pull_many);
+        vectorized overrides must preserve that mapping wherever their
+        dynamics depend on the round."""
         return [Observation.of(self.pull(k, round_index + i))
                 for i, k in enumerate(knobs_list)]

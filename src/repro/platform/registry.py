@@ -9,6 +9,11 @@ Names follow ``<platform>/<model>/<scenario>``:
     engine/smollm-360m               real InferenceEngine (scenario "live"
                                      implied; "engine/<arch>/live" also ok)
 
+plus the composite fleet form ``fleet/<n>x<platform>/<model>/<scenario>``
+(e.g. ``fleet/4xjetson/llama3.2-1b/landscape``): N devices of the named
+backend behind one shared arrival queue, with per-device jitter knobs —
+see `repro.platform.fleet`.
+
 `make_env` returns the environment; `make_space` the matching ArmSpace;
 `pull_many` evaluates a batch of knob dicts through an environment's
 batched hook (or the sequential fallback).  Builders take keyword
@@ -18,10 +23,13 @@ backend by name without importing its module.
 
 New backends register with `register_env("myboard", "landscape")` and are
 immediately constructible everywhere — the bandit core never changes.
+Pass `models=` (a callable returning the valid model names) so
+`available_envs()` and the registry's KeyErrors can list concrete names.
 """
 
 from __future__ import annotations
 
+import re
 from typing import Callable, Dict, List, Sequence, Tuple
 
 from repro.core.arms import (paper_arm_space, tpu_arm_space,
@@ -34,23 +42,41 @@ _BUILDERS: Dict[Tuple[str, str], Callable] = {}
 # (platform, scenario) -> space builder(**overrides) -> ArmSpace
 _SPACES: Dict[Tuple[str, str], Callable] = {}
 
+# platform -> callable() -> list of valid model names (lazy: listing may
+# need heavy imports, and third-party platforms may not know theirs)
+_MODELS: Dict[str, Callable[[], Sequence[str]]] = {}
+
 #: Platforms whose names may omit the scenario ("engine/<arch>").
 _DEFAULT_SCENARIO = {"engine": "live"}
 
+_FLEET_SPEC = re.compile(r"^(\d+)x(.+)$")
 
-def register_env(platform: str, scenario: str, space: Callable = None):
+
+def register_env(platform: str, scenario: str, space: Callable = None,
+                 models: Callable[[], Sequence[str]] = None):
     """Decorator registering an environment builder (and optionally the
-    matching arm-space builder) under (platform, scenario)."""
+    matching arm-space builder and a model-name lister) under
+    (platform, scenario)."""
     def deco(fn):
         _BUILDERS[(platform, scenario)] = fn
         if space is not None:
             _SPACES[(platform, scenario)] = space
+        if models is not None:
+            _MODELS[platform] = models
         return fn
     return deco
 
 
 def parse_name(name: str) -> Tuple[str, str, str]:
     parts = name.split("/")
+    if parts and parts[0] == "fleet":
+        if len(parts) != 4 or not _FLEET_SPEC.match(parts[1]):
+            raise KeyError(
+                f"fleet environment name must be "
+                f"'fleet/<n>x<platform>/<model>/<scenario>' "
+                f"(e.g. 'fleet/4xjetson/llama3.2-1b/landscape'), got "
+                f"{name!r}")
+        return f"fleet/{parts[1]}", parts[2], parts[3]
     if len(parts) == 2:
         platform, model = parts
         scenario = _DEFAULT_SCENARIO.get(platform)
@@ -63,17 +89,55 @@ def parse_name(name: str) -> Tuple[str, str, str]:
         platform, model, scenario = parts
     else:
         raise KeyError(f"environment name must be "
-                       f"'<platform>/<model>/<scenario>', got {name!r}")
+                       f"'<platform>/<model>/<scenario>' or "
+                       f"'fleet/<n>x<platform>/<model>/<scenario>', "
+                       f"got {name!r}")
     return platform, model, scenario
+
+
+def _fleet_spec(platform: str) -> Tuple[int, str]:
+    """'fleet/<n>x<base>' -> (n, base)."""
+    m = _FLEET_SPEC.match(platform[len("fleet/"):])
+    return int(m.group(1)), m.group(2)
+
+
+def _models_of(platform: str) -> List[str]:
+    fn = _MODELS.get(platform)
+    if fn is None:
+        return ["<model>"]
+    return sorted(fn())
+
+
+def _check_model(platform: str, model: str) -> None:
+    """Fail early with the concrete model list when the platform knows it
+    (builders still guard themselves for direct construction)."""
+    fn = _MODELS.get(platform)
+    if fn is not None and model not in fn():
+        raise KeyError(f"unknown {platform} model {model!r}; "
+                       f"available: {sorted(fn())}")
 
 
 def _builder(name: str) -> Tuple[Callable, str, Tuple[str, str]]:
     platform, model, scenario = parse_name(name)
+    if platform.startswith("fleet/"):
+        n, base = _fleet_spec(platform)
+        if (base, scenario) not in _BUILDERS:
+            raise KeyError(f"no environment {base!r}/{scenario!r} to build "
+                           f"a fleet from; available: {available_envs()}")
+        _check_model(base, model)
+
+        def fleet_builder(model, **kw):
+            from repro.platform.fleet import make_fleet
+            return make_fleet(n, base, model, scenario, **kw)
+
+        return fleet_builder, model, (base, scenario)
     try:
-        return _BUILDERS[(platform, scenario)], model, (platform, scenario)
+        builder = _BUILDERS[(platform, scenario)]
     except KeyError:
         raise KeyError(f"no environment {platform!r}/{scenario!r}; "
                        f"available: {available_envs()}") from None
+    _check_model(platform, model)
+    return builder, model, (platform, scenario)
 
 
 def make_env(name: str, **overrides):
@@ -84,8 +148,11 @@ def make_env(name: str, **overrides):
 
 def make_space(name: str, **overrides):
     """The ArmSpace matching environment `name` (same grid the paper uses
-    for the platform, plus any extra knobs the scenario adds)."""
+    for the platform, plus any extra knobs the scenario adds).  Fleet
+    names use the base platform's space: all devices share one grid."""
     platform, _, scenario = parse_name(name)
+    if platform.startswith("fleet/"):
+        _, platform = _fleet_spec(platform)
     try:
         builder = _SPACES[(platform, scenario)]
     except KeyError:
@@ -95,13 +162,30 @@ def make_space(name: str, **overrides):
 
 
 def available_envs() -> Tuple[str, ...]:
-    return tuple(sorted(f"{p}/<model>/{s}" for p, s in _BUILDERS))
+    """All constructible names, with concrete model names where the
+    platform registered a lister (fleets compose on top of any of these:
+    'fleet/<n>x' + name)."""
+    names = []
+    for (p, s) in _BUILDERS:
+        for m in _models_of(p):
+            names.append(f"{p}/{m}/{s}")
+    return tuple(sorted(names))
 
 
 def pull_many(env, knobs_list: Sequence[dict], round_index: int = 0
               ) -> List[Observation]:
     """Batched-evaluation hook: use the environment's own `pull_many` when
-    it has one, else pull sequentially.  Always returns Observations."""
+    it has one, else pull sequentially.  Always returns Observations.
+
+    Contract (both paths): slot i of `knobs_list` is evaluated as logical
+    round ``round_index + i``.  The sequential fallback realizes this by
+    calling ``pull(knobs, round_index + i)``; a batched override receives
+    only the base `round_index` and must advance per slot itself wherever
+    its dynamics depend on the round (e.g. the events scenario's trace
+    seeds).  Round-independent backends (the closed-form landscapes) may
+    ignore it, but their observation-noise streams must still advance
+    exactly as K sequential pulls would.
+    """
     fn = getattr(env, "pull_many", None)
     if fn is not None:
         return [Observation.of(o) for o in fn(knobs_list, round_index)]
@@ -115,6 +199,20 @@ def pull_many(env, knobs_list: Sequence[dict], round_index: int = 0
 # ---------------------------------------------------------------------------
 
 
+def _jetson_models() -> List[str]:
+    from repro.serving import energy
+    return list(energy.ORIN_WORKLOADS)
+
+
+def _config_archs() -> List[str]:
+    """Every name repro.configs resolves: the dashed public aliases AND
+    the raw module names (configs.get accepts both, so both must pass
+    validation and appear in listings)."""
+    import repro.configs as configs_mod
+    return sorted(set(configs_mod.ALIASES) | set(configs_mod.ALIASES.
+                                                 values()))
+
+
 def _orin_workload(model: str):
     from repro.serving import energy
     try:
@@ -124,14 +222,16 @@ def _orin_workload(model: str):
                        f"have {sorted(energy.ORIN_WORKLOADS)}") from None
 
 
-@register_env("jetson", "landscape", space=paper_arm_space)
+@register_env("jetson", "landscape", space=paper_arm_space,
+              models=_jetson_models)
 def _jetson_landscape(model: str, **kw):
     from repro.serving import simulator
     board, work = _orin_workload(model)
     return simulator.LandscapeEnv(board, work, **kw)
 
 
-@register_env("jetson", "events", space=paper_arm_space)
+@register_env("jetson", "events", space=paper_arm_space,
+              models=_jetson_models)
 def _jetson_events(model: str, **kw):
     from repro.serving import simulator
     board, work = _orin_workload(model)
@@ -145,8 +245,8 @@ def _tpu_profile(arch: str, model_shards: int):
     try:
         cfg = configs_mod.get(arch)
     except ModuleNotFoundError:
-        raise KeyError(f"unknown TPU model {arch!r}; see repro.configs "
-                       "for available architectures") from None
+        raise KeyError(f"unknown TPU model {arch!r}; "
+                       f"available: {sorted(configs_mod.ALIASES)}") from None
     bundle = bundle_for(cfg)
     kv_bytes = 2.0 * 2 * getattr(cfg, "n_kv_heads", 8) \
         * getattr(cfg, "head_dim", 128) * getattr(cfg, "n_layers", 32)
@@ -156,21 +256,24 @@ def _tpu_profile(arch: str, model_shards: int):
     return energy.TPUChip(), model
 
 
-@register_env("tpu-v5e", "landscape", space=tpu_arm_space)
+@register_env("tpu-v5e", "landscape", space=tpu_arm_space,
+              models=_config_archs)
 def _tpu_landscape(model: str, *, model_shards: int = 16, **kw):
     from repro.serving import simulator
     chip, served = _tpu_profile(model, model_shards)
     return simulator.TPULandscapeEnv(chip, served, **kw)
 
 
-@register_env("tpu-v5e", "elastic", space=tpu_elastic_arm_space)
+@register_env("tpu-v5e", "elastic", space=tpu_elastic_arm_space,
+              models=_config_archs)
 def _tpu_elastic(model: str, *, model_shards: int = 16, **kw):
     from repro.serving import simulator
     chip, served = _tpu_profile(model, model_shards)
     return simulator.TPUElasticEnv(chip, served, **kw)
 
 
-@register_env("engine", "live", space=paper_arm_space)
+@register_env("engine", "live", space=paper_arm_space,
+              models=_config_archs)
 def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                  max_seq_len: int = 128, prompt_len: int = 16,
                  max_new_tokens: int = 8, arrival_rate: float = 1.0):
@@ -182,8 +285,8 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
     try:
         cfg = configs_mod.get_smoke(arch)
     except ModuleNotFoundError:
-        raise KeyError(f"unknown engine model {arch!r}; see repro.configs "
-                       "for available architectures") from None
+        raise KeyError(f"unknown engine model {arch!r}; "
+                       f"available: {sorted(configs_mod.ALIASES)}") from None
     bundle = bundle_for(cfg)
     params = bundle.init_params(jax.random.PRNGKey(seed))
     engine = InferenceEngine(bundle, params, max_batch=max_batch,

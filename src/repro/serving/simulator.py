@@ -28,8 +28,10 @@ Three levels of fidelity:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arms import ArmSpace
@@ -43,6 +45,61 @@ from repro.serving.requests import ArrivalProcess, Request
 # ---------------------------------------------------------------------------
 # Closed-form environments (configuration search experiments)
 # ---------------------------------------------------------------------------
+#
+# Both landscape environments override the `pull_many` batched-evaluation
+# hook with a single jitted kernel over the K slots, so a K-wide
+# BatchController round costs one XLA call instead of K Python pulls.  The
+# kernels take every model constant as a traced scalar — one compile per
+# round width K, shared across environments and seeds.
+
+
+@jax.jit
+def _jetson_batch_eval(levels, batches, freqs, volts, p_static, c_eff,
+                       t_unit, c0, kappa, pu, b_ref, work_scale,
+                       arrival_rate, n_requests):
+    """Vectorized closed form of LandscapeEnv.expected over K arms:
+    Eq. 2 power, Eq. 3 batch time, Eq. 5 energy, Eq. 7 + backlog latency."""
+    f = freqs[levels]
+    v = volts[levels]
+    util = (batches / b_ref) ** pu
+    p = p_static + c_eff * v * v * (f / 1000.0) * util
+    ff = kappa + (1.0 - kappa) * freqs[-1] / f
+    tb = t_unit * (c0 + work_scale * batches) * ff
+    wait = (batches - 1.0) / (2.0 * arrival_rate)
+    n_batches = jnp.ceil(n_requests / batches)
+    backlog = jnp.maximum(0.0, tb - batches / arrival_rate) \
+        * (n_batches - 1.0) / 2.0
+    energy = p * tb / batches
+    latency = wait + tb + backlog
+    return energy, latency, tb, wait, backlog, p
+
+
+@jax.jit
+def _tpu_batch_eval(perf_states, batches, widths, flops_per_token,
+                    weight_bytes, kv_bytes_per_seq, coll_bytes, peak_flops,
+                    hbm_bw, ici_bw, overhead_s, p_idle, p_peak, ctx,
+                    tokens_out, arrival_rate, n_requests):
+    """Vectorized TPUServedModel.step_time + TPUChip.power over K arms,
+    with `widths` (slice_width) as parallel servers — ones for the plain
+    landscape scenario."""
+    comp = flops_per_token * batches / (peak_flops * perf_states)
+    mem = (weight_bytes + kv_bytes_per_seq * ctx * batches) / hbm_bw
+    coll = coll_bytes * batches / ici_bw
+    busy = jnp.maximum(comp, mem + coll)
+    share = jnp.minimum(comp / jnp.maximum(busy, 1e-12), 1.0)
+    tb = (busy + overhead_s) * tokens_out
+
+    v = 0.7 + 0.3 * perf_states
+    core = share * (v * v * perf_states)
+    p = p_idle + (p_peak - p_idle) * (core + (1.0 - share)) / 2.0
+
+    wait = (batches - 1.0) / (2.0 * arrival_rate)
+    n_batches = jnp.ceil(n_requests / batches)
+    backlog = jnp.maximum(0.0, tb / widths - batches / arrival_rate) \
+        * (n_batches - 1.0) / 2.0
+    energy = p * widths * tb / (batches * widths)
+    latency = wait + tb + backlog
+    return energy, latency, tb, wait, backlog, p * widths, share
 
 
 class LandscapeEnv(BaseEnvironment):
@@ -50,6 +107,8 @@ class LandscapeEnv(BaseEnvironment):
 
     Knobs: {'freq_mhz': level value, 'batch': int}.
     """
+
+    round_independent = True
 
     def __init__(self, board: DVFSBoard, work: WorkloadModel,
                  arrival_rate: float = 1.0, n_requests: int = 2500,
@@ -83,12 +142,53 @@ class LandscapeEnv(BaseEnvironment):
                 float(np.exp(self.noise * self.rng.standard_normal())))
         return obs
 
+    def pull_many(self, knobs_list: Sequence[dict], round_index: int = 0
+                  ) -> List[Observation]:
+        """Vectorized batched pull: one jitted evaluation for all K slots
+        (the f32 XLA closed form; sequential `pull` keeps the f64 scalar
+        path, so the two agree to float32 precision, not bit-for-bit).
+
+        Registry contract: slot i is logical round ``round_index + i``.
+        This environment's landscape is round-independent, and the noise
+        stream advances exactly as K sequential pulls would (the (K, 2)
+        normal draw consumes the same generator sequence).
+        """
+        del round_index
+        levels = np.array([self.platform.level_of(k["freq_mhz"])
+                           for k in knobs_list], np.int32)
+        batches = np.array([int(k["batch"]) for k in knobs_list], np.float32)
+        work = self.work
+        e, l, tb, wait, backlog, p = (np.asarray(x, np.float64)
+                                      for x in _jetson_batch_eval(
+            jnp.asarray(levels), jnp.asarray(batches),
+            jnp.asarray(self.board.freqs_mhz, jnp.float32),
+            jnp.asarray(self.board.voltages, jnp.float32),
+            self.board.p_static, self.board.c_eff, work.t_unit,
+            work.c0_units, work.kappa, work.pu, float(work.b_ref),
+            self.work_scale, self.arrival_rate, float(self.n_requests)))
+        if self.noise > 0:
+            z = self.rng.standard_normal((len(knobs_list), 2))
+            e = e * np.exp(self.noise * z[:, 0])
+            l = l * np.exp(self.noise * z[:, 1])
+        self.platform.set_level(int(levels[-1]))
+        return [Observation(
+            energy=float(e[i]), latency=float(l[i]), batch_time=float(tb[i]),
+            queue_wait=float(wait[i]), backlog=float(backlog[i]),
+            power=float(p[i]), batch=int(batches[i]),
+            tokens=int(batches[i]) * work.tokens_out,
+            metadata={"backend": "jetson-landscape", "level": int(levels[i]),
+                      "vectorized": True})
+            for i in range(len(knobs_list))]
+
 
 class TPULandscapeEnv(BaseEnvironment):
     """TPU v5e serving environment (DESIGN.md SS3 adaptation).
 
     Knobs: {'perf_state': float, 'batch': int}.
     """
+
+    round_independent = True
+    _backend_tag = "tpu-landscape"
 
     def __init__(self, chip, model, tokens_out: int = 70,
                  prompt_len: float = 256.0, arrival_rate: float = 1.0,
@@ -131,6 +231,44 @@ class TPULandscapeEnv(BaseEnvironment):
                 float(np.exp(self.noise * self.rng.standard_normal())))
         return obs
 
+    def pull_many(self, knobs_list: Sequence[dict], round_index: int = 0
+                  ) -> List[Observation]:
+        """Vectorized batched pull over the TPU roofline (see
+        LandscapeEnv.pull_many for the contract/precision notes).  Handles
+        the elastic third knob too: `slice_width` defaults to 1, so
+        TPUElasticEnv inherits this hook unchanged."""
+        del round_index
+        ps = np.array([float(k["perf_state"]) for k in knobs_list],
+                      np.float32)
+        batches = np.array([int(k["batch"]) for k in knobs_list], np.float32)
+        widths = np.array([int(k.get("slice_width", 1)) for k in knobs_list],
+                          np.float32)
+        m, chip = self.model, self.chip
+        ctx = self.prompt_len + self.tokens_out / 2.0
+        e, l, tb, wait, backlog, p, share = (
+            np.asarray(x, np.float64) for x in _tpu_batch_eval(
+                jnp.asarray(ps), jnp.asarray(batches), jnp.asarray(widths),
+                m.flops_per_token, m.weight_bytes, m.kv_bytes_per_seq,
+                m.collective_bytes_per_token, chip.peak_flops, chip.hbm_bw,
+                chip.ici_bw, m.overhead_s, chip.p_idle, chip.p_peak, ctx,
+                float(self.tokens_out), self.arrival_rate,
+                float(self.n_requests)))
+        if self.noise > 0:
+            z = self.rng.standard_normal((len(knobs_list), 2))
+            e = e * np.exp(self.noise * z[:, 0])
+            l = l * np.exp(self.noise * z[:, 1])
+        self.platform.set_level(self.platform.level_of(float(ps[-1])))
+        self.platform.compute_share = float(share[-1])
+        backend = self._backend_tag
+        return [Observation(
+            energy=float(e[i]), latency=float(l[i]), batch_time=float(tb[i]),
+            queue_wait=float(wait[i]), backlog=float(backlog[i]),
+            power=float(p[i]), batch=int(batches[i]),
+            tokens=int(batches[i]) * self.tokens_out,
+            metadata={"backend": backend, "compute_share": float(share[i]),
+                      "slice_width": int(widths[i]), "vectorized": True})
+            for i in range(len(knobs_list))]
+
 
 class TPUElasticEnv(TPULandscapeEnv):
     """Beyond-paper third knob: `slice_width` = number of model-parallel
@@ -138,6 +276,8 @@ class TPUElasticEnv(TPULandscapeEnv):
     (service rate x slices, so saturation recedes and queue wait shrinks)
     but burn idle+dynamic power on every active chip — energy per request
     scales with slices / throughput."""
+
+    _backend_tag = "tpu-elastic"
 
     def expected(self, knobs: Dict) -> Observation:
         p, tb, b = self._batch_power_time(knobs)

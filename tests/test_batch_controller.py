@@ -1,0 +1,252 @@
+"""Batched Thompson sampling and the K-wide controller loop: equivalence
+with the sequential paper algorithm (bit-identity at K=1, segment-sum
+batch updates, without-replacement selection) and the batched-search
+speedup on the vectorized landscape."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bandit, baselines, controller, cost, priors
+from repro.platform import make_env, make_space
+
+
+# ---------------------------------------------------------------------------
+# select_arms: batched EVAL
+# ---------------------------------------------------------------------------
+
+
+def test_select_arms_k1_matches_select_arm():
+    state = bandit.init_state(9, prior_mu=1.0, prior_sigma=0.4)
+    for seed in range(10):
+        key = jax.random.PRNGKey(seed)
+        assert int(bandit.select_arms(state, key, 1)[0]) == \
+            int(bandit.select_arm(state, key))
+
+
+def test_select_arms_without_replacement():
+    state = bandit.init_state(6)
+    for seed in range(10):
+        arms = np.asarray(bandit.select_arms(state, jax.random.PRNGKey(seed),
+                                             6))
+        assert sorted(arms.tolist()) == list(range(6))
+
+
+def test_select_arms_respects_active_mask():
+    state = bandit.init_state(6)
+    mask = jnp.asarray([True, False, True, False, True, False])
+    for seed in range(10):
+        arms = np.asarray(bandit.select_arms(state, jax.random.PRNGKey(seed),
+                                             3, mask))
+        assert set(arms.tolist()) == {0, 2, 4}
+    # k beyond the active-arm count cannot honor without-replacement
+    with pytest.raises(ValueError, match="active"):
+        bandit.select_arms(state, jax.random.PRNGKey(0), 4, mask)
+
+
+def test_select_arms_validates_k():
+    state = bandit.init_state(4)
+    with pytest.raises(ValueError):
+        bandit.select_arms(state, jax.random.PRNGKey(0), 0)
+    with pytest.raises(ValueError):
+        bandit.select_arms(state, jax.random.PRNGKey(0), 5)
+
+
+# ---------------------------------------------------------------------------
+# update_batch: delayed batched UPDATE == K sequential updates
+# ---------------------------------------------------------------------------
+
+
+def _chain(state, arms, costs):
+    for a, c in zip(arms, costs):
+        state = bandit.update(state, a, c)
+    return state
+
+
+def _assert_states_equal(a, b, exact=True):
+    for f in ("mu", "sigma2", "count", "sum_x", "sum_x2"):
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        if exact:
+            np.testing.assert_array_equal(x, y, err_msg=f)
+        else:
+            np.testing.assert_allclose(x, y, rtol=1e-6, err_msg=f)
+
+
+def test_update_batch_bit_identical_for_distinct_arms():
+    """The without-replacement contract: K distinct arms -> the segment-sum
+    batch form equals K chained scalar updates bit-for-bit."""
+    state = bandit.init_state(8, prior_mu=1.0, prior_sigma=0.5)
+    # pre-load some history so posteriors are non-trivial
+    state = _chain(state, [1, 1, 4], [0.8, 0.75, 0.6])
+    arms, costs = [3, 1, 6, 0], [0.9, 0.7, 0.55, 1.1]
+    _assert_states_equal(bandit.update_batch(state, arms, costs),
+                         _chain(state, arms, costs), exact=True)
+
+
+def test_update_batch_duplicate_arms_close():
+    """Duplicate arms only differ by float-addition order inside the
+    segment (generic with-replacement fallback policies can produce them)."""
+    state = bandit.init_state(5)
+    arms, costs = [2, 2, 2, 4], [0.8, 0.81, 0.79, 0.6]
+    _assert_states_equal(bandit.update_batch(state, arms, costs),
+                         _chain(state, arms, costs), exact=False)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 10),
+       n_arms=st.integers(10, 16))
+def test_update_batch_equivalence_property(seed, k, n_arms):
+    """Property: on random without-replacement draws with random costs,
+    batch == chain exactly; posterior stds never grow."""
+    rng = np.random.default_rng(seed)
+    state = bandit.init_state(n_arms, prior_mu=1.0, prior_sigma=0.3)
+    for _ in range(rng.integers(0, 3)):
+        state = bandit.update(state, int(rng.integers(n_arms)),
+                              float(rng.uniform(0.4, 1.2)))
+    arms = rng.choice(n_arms, size=k, replace=False).tolist()
+    costs = rng.uniform(0.4, 1.2, size=k).astype(np.float32).tolist()
+    out = bandit.update_batch(state, arms, costs)
+    _assert_states_equal(out, _chain(state, arms, costs), exact=True)
+    assert np.all(np.asarray(out.sigma2)[arms] <=
+                  np.asarray(state.sigma2)[arms] + 1e-7)
+
+
+def test_windowed_update_batch_matches_chain():
+    w = bandit.init_windowed(5, gamma=0.9, prior_sigma=0.3)
+    arms, costs = [1, 3, 1], [0.5, 0.7, 0.52]
+    wb = bandit.windowed_update_batch(w, jnp.asarray(arms),
+                                      jnp.asarray(costs))
+    ws = w
+    for a, c in zip(arms, costs):
+        ws = bandit.windowed_update(ws, a, c)
+    _assert_states_equal(wb.base, ws.base, exact=True)
+
+
+def test_grid_select_many_sweeps_consecutive_arms():
+    g = baselines.GridSearch()
+    state = g.init(10)
+    arms = np.asarray(g.select_many(state, jax.random.PRNGKey(0),
+                                    jnp.asarray(1), 4))
+    assert arms.tolist() == [0, 1, 2, 3]
+    state = g.update_batch(state, arms, np.full(4, 0.5, np.float32))
+    arms2 = np.asarray(g.select_many(state, jax.random.PRNGKey(1),
+                                     jnp.asarray(5), 4))
+    assert arms2.tolist() == [4, 5, 6, 7]
+
+
+# ---------------------------------------------------------------------------
+# BatchController: K=1 bit-identity, K-wide rounds, batched-search speedup
+# ---------------------------------------------------------------------------
+
+NAME = "jetson/llama3.2-1b/landscape"
+
+
+def _setup(noise, alpha=0.5):
+    space = make_space(NAME)
+    cm = cost.CostModel(alpha=alpha)
+    env0 = make_env(NAME, noise=0.0)
+    e_ref, l_ref = env0.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env0.expected,
+                                                     cm)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    return space, cm, opt_arm, opt_cost, mu0, sig0
+
+
+def _camel(mu0, sig0):
+    return baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+
+
+def test_batch_controller_k1_bit_identical_to_controller():
+    """Controller IS BatchController(k=1) — same loop, and the records
+    must agree bit-for-bit on a fixed seed (arms, costs, telemetry)."""
+    space, cm, _, opt_cost, mu0, sig0 = _setup(0.03)
+    a = controller.Controller(space, _camel(mu0, sig0), cm,
+                              optimal_cost=opt_cost, seed=3)
+    b = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                   optimal_cost=opt_cost, seed=3, k=1)
+    ra = a.run(make_env(NAME, noise=0.03, seed=3), 25)
+    rb = b.run(make_env(NAME, noise=0.03, seed=3), 25)
+    assert ra.best_arm == rb.best_arm
+    for x, y in zip(ra.records, rb.records):
+        assert (x.t, x.arm, x.round, x.slot) == (y.t, y.arm, y.round, y.slot)
+        assert (x.energy, x.latency, x.cost, x.regret) == \
+            (y.energy, y.latency, y.cost, y.regret)
+    np.testing.assert_array_equal(ra.cum_regret, rb.cum_regret)
+
+
+def test_batch_controller_records_k_slots_per_round():
+    space, cm, _, opt_cost, mu0, sig0 = _setup(0.03)
+    ctrl = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                      optimal_cost=opt_cost, seed=0, k=4)
+    res = ctrl.run(make_env(NAME, noise=0.03, seed=0), 5)
+    assert len(res.records) == 20
+    assert res.n_rounds == 5
+    for r in res.records:
+        assert r.t == r.round * 4 + r.slot
+        assert 0 <= r.slot < 4
+        # the K slots of one round go through the vectorized hook
+        assert r.obs.metadata.get("vectorized") is True
+    # within a round the arms are distinct (without-replacement selection)
+    for rnd in range(5):
+        arms = [r.arm for r in res.records if r.round == rnd]
+        assert len(set(arms)) == 4
+
+
+def test_batch_controller_generic_policy_fallback():
+    """Policies without select_many/update_batch (UCB1) still run K-wide
+    rounds via the scalar fallbacks."""
+    space, cm, _, opt_cost, _, _ = _setup(0.03)
+    ctrl = controller.BatchController(space, baselines.make_policy("ucb1"),
+                                      cm, optimal_cost=opt_cost, seed=0,
+                                      k=3)
+    res = ctrl.run(make_env(NAME, noise=0.03, seed=0), 4)
+    assert len(res.records) == 12
+    assert int(np.asarray(res.final_state.count).sum()) == 12
+
+
+def test_batch_controller_validates_k():
+    space, cm, _, _, mu0, sig0 = _setup(0.0)
+    with pytest.raises(ValueError):
+        controller.BatchController(space, _camel(mu0, sig0), cm, k=0)
+    with pytest.raises(ValueError):
+        controller.BatchController(space, _camel(mu0, sig0), cm,
+                                   k=space.n_arms + 1)
+
+
+def test_batched_search_4x_fewer_rounds_same_best_arm():
+    """Acceptance: k=8 reaches the same best arm as the sequential
+    controller in >= 4x fewer rounds of environment evaluation (each k=8
+    round is one vectorized pull_many call on the landscape)."""
+    space, cm, opt_arm, opt_cost, mu0, sig0 = _setup(0.0)
+    for seed in (0, 1):
+        c1 = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                        optimal_cost=opt_cost, seed=seed,
+                                        k=1)
+        r1 = c1.run(make_env(NAME, noise=0.0, seed=seed), 60)
+        c8 = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                        optimal_cost=opt_cost, seed=seed,
+                                        k=8)
+        r8 = c8.run(make_env(NAME, noise=0.0, seed=seed), 12)
+        assert r1.best_arm == r8.best_arm == opt_arm
+        n1 = controller.rounds_to_converge(r1.records, 1, opt_arm, mu0,
+                                           space.n_arms)
+        n8 = controller.rounds_to_converge(r8.records, 8, opt_arm, mu0,
+                                           space.n_arms)
+        assert n1 is not None and n8 is not None
+        assert n1 >= 4 * n8, f"seed {seed}: k=1 {n1} rounds, k=8 {n8}"
+
+
+def test_batch_controller_windowed_policy():
+    """The windowed (non-stationary) sampler runs K-wide rounds through
+    its chained batch update."""
+    space, cm, _, _, _, _ = _setup(0.03)
+    ctrl = controller.BatchController(
+        space, baselines.make_policy("camel_windowed", gamma=0.95,
+                                     prior_mu=1.0, prior_sigma=0.2),
+        cm, seed=0, k=4)
+    res = ctrl.run(make_env(NAME, noise=0.03, seed=0), 4)
+    assert len(res.records) == 16
+    assert 0 <= res.best_arm < space.n_arms

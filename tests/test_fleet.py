@@ -1,0 +1,249 @@
+"""Fleet platform: registry composition, round-robin dispatch with
+rotation, Observation merging/conservation, per-device heterogeneity, and
+the unified pull_many round_index contract."""
+
+import numpy as np
+import pytest
+
+from repro.core import baselines, controller, cost
+from repro.platform import (Observation, available_envs, make_env,
+                            make_space, merge_observations, parse_name,
+                            pull_many)
+
+FLEET = "fleet/4xjetson/llama3.2-1b/landscape"
+
+
+# ---------------------------------------------------------------------------
+# Registry: fleet names and concrete model listings
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fleet_name():
+    assert parse_name(FLEET) == ("fleet/4xjetson", "llama3.2-1b",
+                                 "landscape")
+    with pytest.raises(KeyError, match="fleet environment name"):
+        parse_name("fleet/nope")
+    with pytest.raises(KeyError, match="fleet environment name"):
+        parse_name("fleet/4yjetson/llama3.2-1b/landscape")
+
+
+def test_fleet_construction_and_space():
+    env = make_env(FLEET, noise=0.0, seed=0)
+    assert env.n_devices == 4
+    assert len({id(d) for d in env.devices}) == 4
+    # fleet space == base platform space (all devices share one grid)
+    assert make_space(FLEET).knobs == make_space(
+        "jetson/llama3.2-1b/landscape").knobs
+
+
+def test_fleet_unknown_base_or_model_errors():
+    with pytest.raises(KeyError, match="unknown jetson model"):
+        make_env("fleet/2xjetson/bogus/landscape")
+    with pytest.raises(KeyError, match="available"):
+        make_env("fleet/2xmars/llama3.2-1b/landscape")
+
+
+def test_available_envs_lists_concrete_models():
+    avail = available_envs()
+    assert "jetson/llama3.2-1b/landscape" in avail
+    assert "jetson/qwen2.5-3b/events" in avail
+    assert "tpu-v5e/qwen2-1.5b/elastic" in avail
+    assert not any("<model>" in a for a in avail)
+
+
+def test_registry_accepts_raw_config_module_names():
+    """configs.get resolves both the dashed alias and the raw module name;
+    make_env's model validation must accept both spellings."""
+    env = make_env("tpu-v5e/qwen2_1p5b/landscape", noise=0.0)
+    assert env.platform.knob_name == "perf_state"
+    assert "tpu-v5e/qwen2_1p5b/landscape" in available_envs()
+
+
+# ---------------------------------------------------------------------------
+# Dispatch and merging
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_dispatch_covers_devices_and_rotates():
+    env = make_env(FLEET, noise=0.0, seed=0)
+    space = make_space(FLEET)
+    knobs = [space.values(i) for i in range(8)]
+    first = pull_many(env, knobs, round_index=0)
+    assert [o.metadata["device"] for o in first] == [0, 1, 2, 3, 0, 1, 2, 3]
+    # the next controller round (round_index advanced by K) is rotated one
+    # device over (debiases persistent offsets)
+    second = pull_many(env, knobs, round_index=8)
+    assert [o.metadata["device"] for o in second] == [1, 2, 3, 0, 1, 2, 3, 0]
+    for o in first:
+        assert o.metadata["backend"] == "fleet"
+        assert o.metadata["device_backend"] == "jetson-landscape"
+
+
+def test_fleet_dispatch_is_stateless_in_round_index():
+    """Replaying the same round_index reproduces the same dispatch, and
+    scalar pull follows the same slot->device rule (K=1)."""
+    env = make_env(FLEET, noise=0.0, seed=0)
+    space = make_space(FLEET)
+    knobs = [space.values(i) for i in range(4)]
+    a = pull_many(env, knobs, round_index=12)
+    b = pull_many(env, knobs, round_index=12)
+    assert [(o.energy, o.latency, o.metadata["device"]) for o in a] == \
+        [(o.energy, o.latency, o.metadata["device"]) for o in b]
+    # scalar pull: device t % N
+    for t in range(8):
+        assert env.pull(knobs[0], t).metadata["device"] == t % 4
+
+
+def test_fleet_merge_conserves_totals():
+    """Acceptance: merged Observations conserve totals — the sums of
+    per-device tokens/joules/power equal the fleet totals."""
+    env = make_env(FLEET, noise=0.0, seed=0)
+    space = make_space(FLEET)
+    obs = pull_many(env, [space.values(i) for i in range(0, 48, 6)])
+    m = merge_observations(obs)
+    assert m.tokens == sum(o.tokens for o in obs)
+    assert m.batch == sum(o.batch for o in obs)
+    np.testing.assert_allclose(m.energy * m.batch,
+                               sum(o.energy * o.batch for o in obs),
+                               rtol=1e-12)
+    np.testing.assert_allclose(m.power, sum(o.power for o in obs),
+                               rtol=1e-12)
+    # request-weighted latency stays inside the per-device envelope
+    assert min(o.latency for o in obs) <= m.latency <= \
+        max(o.latency for o in obs)
+    assert m.metadata["backend"] == "fleet"
+
+
+def test_merge_observations_rejects_empty():
+    with pytest.raises(ValueError):
+        merge_observations([])
+
+
+def test_fleet_jitter_is_persistent_and_deterministic():
+    space = make_space(FLEET)
+    knobs = space.values(17)
+    a = make_env(FLEET, noise=0.0, seed=0)
+    b = make_env(FLEET, noise=0.0, seed=0)
+    assert a.speed_factors == b.speed_factors
+    assert a.power_factors == b.power_factors
+    # same device -> identical observation every time (noise off)
+    o1 = a.pull(knobs, 0)
+    o2 = a.pull(knobs, 4)      # 4 % 4 == 0: same device again
+    assert (o1.energy, o1.latency) == (o2.energy, o2.latency)
+    # different devices disagree by exactly the persistent offsets
+    o3 = a.pull(knobs, 1)
+    base = o1.energy / (a.power_factors[0] * a.speed_factors[0])
+    np.testing.assert_allclose(
+        o3.energy, base * a.power_factors[1] * a.speed_factors[1],
+        rtol=1e-9)
+
+
+def test_fleet_shared_arrival_queue_split():
+    """Each device drains 1/N of the fleet arrival rate: with the default
+    (1 req/s per device) the per-device landscape matches a standalone
+    device at arrival_rate=1."""
+    fleet = make_env(FLEET, noise=0.0, seed=0,
+                     speed_jitter=0.0, power_jitter=0.0)
+    solo = make_env("jetson/llama3.2-1b/landscape", noise=0.0, seed=0,
+                    arrival_rate=1.0)
+    knobs = make_space(FLEET).values(24)
+    f, s = fleet.pull(knobs, 0), solo.pull(knobs, 0)
+    np.testing.assert_allclose(f.energy, s.energy, rtol=1e-9)
+    np.testing.assert_allclose(f.latency, s.latency, rtol=1e-9)
+
+
+def test_fleet_expected_is_device_mean():
+    env = make_env(FLEET, noise=0.0, seed=0)
+    knobs = make_space(FLEET).values(10)
+    exp = env.expected(knobs)
+    per = [env._device_obs(d, dev.expected(knobs))
+           for d, dev in enumerate(env.devices)]
+    np.testing.assert_allclose(exp.energy,
+                               np.mean([o.energy for o in per]), rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# pull_many round_index contract (satellite: both paths agree)
+# ---------------------------------------------------------------------------
+
+
+class _RoundSensitiveEnv:
+    """Toy env whose observation encodes its round_index — no pull_many,
+    so the registry fallback must advance round_index + i."""
+
+    def pull(self, knobs, round_index):
+        return (float(knobs["batch"]), float(round_index + 1))
+
+
+class _BatchedRoundSensitiveEnv(_RoundSensitiveEnv):
+    """Same env with a batched hook honoring the contract: slot i is
+    logical round round_index + i."""
+
+    def pull_many(self, knobs_list, round_index=0):
+        return [self.pull(k, round_index + i)
+                for i, k in enumerate(knobs_list)]
+
+
+def test_pull_many_round_index_contract_both_paths_agree():
+    knobs = [{"batch": b} for b in (4, 8, 12)]
+    fallback = pull_many(_RoundSensitiveEnv(), knobs, round_index=5)
+    batched = pull_many(_BatchedRoundSensitiveEnv(), knobs, round_index=5)
+    assert [(o.energy, o.latency) for o in fallback] == \
+        [(o.energy, o.latency) for o in batched] == \
+        [(4.0, 6.0), (8.0, 7.0), (12.0, 8.0)]
+
+
+def test_fleet_of_events_backends_uses_global_logical_rounds():
+    """Round-sensitive device backends (events trace seeds) receive each
+    slot's exact global logical round: slot i of a fleet round at base r
+    replays device (i + r//K) % N's trace for round r + i."""
+    fleet = make_env("fleet/2xjetson/llama3.2-1b/events", seed=0,
+                     requests_per_pull=30, speed_jitter=0.0,
+                     power_jitter=0.0)
+    solo = make_env("jetson/llama3.2-1b/events", seed=0,
+                    requests_per_pull=30)
+    knobs = [{"freq_mhz": 816.0, "batch": 20}] * 4
+    obs = pull_many(fleet, knobs, round_index=0)
+    # device 0 (seed+0 == solo's seed) served slots 0 and 2
+    assert [o.metadata["device"] for o in obs] == [0, 1, 0, 1]
+    np.testing.assert_allclose(obs[0].energy, solo.pull(knobs[0], 0).energy,
+                               rtol=1e-12)
+    np.testing.assert_allclose(obs[2].energy, solo.pull(knobs[2], 2).energy,
+                               rtol=1e-12)
+
+
+def test_events_env_fallback_advances_round_index():
+    """The events scenario seeds its arrival trace from round_index; the
+    sequential fallback must reproduce per-slot trace seeds exactly."""
+    a = make_env("jetson/llama3.2-1b/events", requests_per_pull=30, seed=0)
+    b = make_env("jetson/llama3.2-1b/events", requests_per_pull=30, seed=0)
+    knobs = [{"freq_mhz": 816.0, "batch": 20}, {"freq_mhz": 612.0,
+                                                "batch": 12}]
+    batched = pull_many(a, knobs, round_index=3)
+    sequential = [b.pull(k, 3 + i) for i, k in enumerate(knobs)]
+    assert [(o.energy, o.latency) for o in batched] == \
+        [(o.energy, o.latency) for o in sequential]
+
+
+# ---------------------------------------------------------------------------
+# End to end: batched controller over the fleet
+# ---------------------------------------------------------------------------
+
+
+def test_batch_controller_on_fleet_end_to_end():
+    env = make_env(FLEET, noise=0.0, seed=0, speed_jitter=0.02,
+                   power_jitter=0.02)
+    space = make_space(FLEET)
+    cm = cost.CostModel(alpha=0.5)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    ctrl = controller.BatchController(
+        space, baselines.make_policy("camel", prior_mu=1.0,
+                                     prior_sigma=0.2), cm, seed=0, k=8)
+    res = ctrl.run(env, 4)
+    assert len(res.records) == 32
+    devices = {r.obs.metadata["device"] for r in res.records}
+    assert devices == {0, 1, 2, 3}
+    for r in res.records:
+        assert isinstance(r.obs, Observation)
+        assert r.obs.metadata["backend"] == "fleet"

@@ -126,7 +126,10 @@ def test_parse_name_and_available():
         "jetson", "llama3.2-1b", "landscape")
     assert parse_name("engine/smollm-360m") == ("engine", "smollm-360m",
                                                 "live")
-    assert "jetson/<model>/landscape" in available_envs()
+    # listings name concrete registered models, not a <model> placeholder
+    assert "jetson/llama3.2-1b/landscape" in available_envs()
+    assert "engine/smollm-360m/live" in available_envs()
+    assert not any("<model>" in n for n in available_envs())
 
 
 def test_registry_name_errors():
@@ -140,8 +143,11 @@ def test_registry_name_errors():
         make_env("jetson/llama3.2-1b")
     with pytest.raises(KeyError):
         make_env("toomany/parts/in/this/name")
-    with pytest.raises(KeyError, match="unknown TPU model"):
+    with pytest.raises(KeyError, match="unknown tpu-v5e model"):
         make_env("tpu-v5e/not-a-model/landscape")
+    # model errors name the concrete alternatives
+    with pytest.raises(KeyError, match="llama3.2-1b"):
+        make_env("jetson/bogus/landscape")
 
 
 @pytest.mark.parametrize("name,knob", [
@@ -216,14 +222,19 @@ def test_landscape_env_expected_unchanged_by_pull_noise():
 
 
 def test_pull_many_matches_sequential_pulls():
+    """The landscape env's vectorized pull_many (one jitted f32 evaluation)
+    consumes the same noise stream as sequential pulls and agrees with the
+    scalar f64 path to float32 precision."""
     env_a = make_env("jetson/llama3.2-1b/landscape", noise=0.03, seed=7)
     env_b = make_env("jetson/llama3.2-1b/landscape", noise=0.03, seed=7)
     space = make_space("jetson/llama3.2-1b/landscape")
     knob_list = [space.values(a) for a in range(5)]
     batched = pull_many(env_a, knob_list)
     sequential = [env_b.pull(k, i) for i, k in enumerate(knob_list)]
-    assert [(o.energy, o.latency) for o in batched] == \
-        [(o.energy, o.latency) for o in sequential]
+    assert all(o.metadata.get("vectorized") for o in batched)
+    np.testing.assert_allclose(
+        [(o.energy, o.latency) for o in batched],
+        [(o.energy, o.latency) for o in sequential], rtol=1e-5)
 
 
 def test_pull_many_fallback_for_plain_envs():
