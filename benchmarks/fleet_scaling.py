@@ -1,8 +1,9 @@
-"""E10 — batched-search scaling: rounds-to-converge and wall-clock vs K.
+"""E10 — batched-search scaling and straggler tolerance.
 
-For K in {1, 2, 4, 8}, run the BatchController on the noise-free Jetson
-llama3.2-1b landscape (K concurrent arms per round through the vectorized
-`pull_many` hook, one jitted evaluation per round) and measure
+Part 1 (`sweep`): for K in {1, 2, 4, 8}, run the BatchController on the
+noise-free Jetson llama3.2-1b landscape (K concurrent arms per round
+through the vectorized `pull_many` hook, one jitted evaluation per round)
+and measure
 
 * rounds_to_converge — the first round after which the committed arm
   (`controller.rounds_to_converge`, the controller's own commit rule)
@@ -10,8 +11,26 @@ llama3.2-1b landscape (K concurrent arms per round through the vectorized
 * wall_clock_s — the wall time of the full run.
 
 K=1 is the paper's sequential Algorithm 1; larger K trades pulls for
-rounds.  ``python -m benchmarks.fleet_scaling`` emits the full sweep as
-JSON (averaged over seeds); `run()` yields the usual CSV rows.
+rounds.
+
+Part 2 (`straggler_sweep`): on a 4-device fleet with one device returning
+results {1, 2, 4, 8}x slower (dispatch factor only — its telemetry is
+unchanged, isolating dispatch slowness from landscape shifts), compare the
+*simulated wall-clock to converge* of
+
+* sync  — BatchController behind the round barrier (`barrier_walltimes`
+  timeline: every round waits for the straggler);
+* async — AsyncController through the completion queue (each record's
+  dispatcher `finished_at` clock; the straggler delays only its own
+  slots, and its late observations enter staleness-inflated).
+
+Acceptance (asserted here and in tests/test_async.py): at a 4x straggler
+the async wall-clock-to-converge stays <= 1.5x the homogeneous case while
+the sync barrier degrades >= 2.5x (it is exactly 4x: the barrier inherits
+the straggler's factor every round).
+
+``python -m benchmarks.fleet_scaling`` emits both sweeps as JSON
+(averaged over seeds); `run()` yields the usual CSV rows.
 """
 
 from __future__ import annotations
@@ -23,12 +42,17 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.core import baselines, controller, cost, priors
-from repro.platform import make_env, make_space
+from repro.platform import barrier_walltimes, make_env, make_space
 
 KS = (1, 2, 4, 8)
 N_SEEDS = 4
 MAX_ROUNDS = {1: 60, 2: 30, 4: 16, 8: 12}
 ENV_NAME = "jetson/llama3.2-1b/landscape"
+
+STRAGGLER_FACTORS = (1.0, 2.0, 4.0, 8.0)
+STRAGGLER_ROUNDS = 24
+FLEET_NAME = "fleet/4xjetson/llama3.2-1b/landscape"
+N_FLEET_DEVICES = 4
 
 
 def _setup():
@@ -74,6 +98,83 @@ def sweep(seeds=range(N_SEEDS)) -> list:
     return out
 
 
+def _fleet_setup(seed: int, factor: float):
+    """Noise- and jitter-free straggler fleet (dispatch factor only, so the
+    cost landscape is identical across factors and the wall-clock effect is
+    isolated), plus its normalized cost model and optimum."""
+    kw = dict(noise=0.0, seed=seed, speed_jitter=0.0, power_jitter=0.0,
+              dispatch_factors=(factor,) + (1.0,) * (N_FLEET_DEVICES - 1))
+    env = make_env(FLEET_NAME, **kw)
+    space = make_space(FLEET_NAME)
+    cm = cost.CostModel(alpha=0.5)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    return env, space, cm, opt_arm, opt_cost, mu0, sig0
+
+
+def straggler_sweep(seeds=range(N_SEEDS)) -> list:
+    k = N_FLEET_DEVICES
+    out = []
+    for factor in STRAGGLER_FACTORS:
+        walls = {"sync": [], "async": []}
+        for seed in seeds:
+            env, space, cm, opt_arm, opt_cost, mu0, sig0 = _fleet_setup(
+                seed, factor)
+            pol = baselines.make_policy("camel", prior_mu=mu0,
+                                        prior_sigma=sig0)
+            sync = controller.BatchController(
+                space, pol, cm, optimal_cost=opt_cost, seed=seed, k=k)
+            rs = sync.run(env, STRAGGLER_ROUNDS)
+            sync_clocks = np.repeat(
+                barrier_walltimes(env, STRAGGLER_ROUNDS, k), k)
+            ws = controller.walltime_to_converge(
+                rs.records, sync_clocks, opt_arm, mu0, space.n_arms)
+
+            env2, _, _, _, _, _, _ = _fleet_setup(seed, factor)
+            pol = baselines.make_policy("camel", prior_mu=mu0,
+                                        prior_sigma=sig0)
+            asyn = controller.AsyncController(
+                space, pol, cm, optimal_cost=opt_cost, seed=seed, k=k)
+            ra = asyn.run(env2, STRAGGLER_ROUNDS)
+            wa = controller.walltime_to_converge(
+                ra.records, controller.record_clocks(ra.records), opt_arm,
+                mu0, space.n_arms)
+            if ws is not None:
+                walls["sync"].append(ws)
+            if wa is not None:
+                walls["async"].append(wa)
+        out.append({
+            "straggler_factor": factor,
+            "sync_wall_to_converge_s": float(np.mean(walls["sync"]))
+            if walls["sync"] else None,
+            "async_wall_to_converge_s": float(np.mean(walls["async"]))
+            if walls["async"] else None,
+            "converged": f"sync {len(walls['sync'])}/{len(list(seeds))}, "
+                         f"async {len(walls['async'])}/{len(list(seeds))}",
+        })
+    base_sync = out[0]["sync_wall_to_converge_s"]
+    base_async = out[0]["async_wall_to_converge_s"]
+    for r in out:
+        r["sync_slowdown"] = (r["sync_wall_to_converge_s"] / base_sync
+                              if base_sync and r["sync_wall_to_converge_s"]
+                              else None)
+        r["async_slowdown"] = (r["async_wall_to_converge_s"] / base_async
+                               if base_async and
+                               r["async_wall_to_converge_s"] else None)
+    # Acceptance: at a 4x straggler the async path holds near the
+    # homogeneous wall-clock while the sync barrier degrades linearly.
+    at4 = next(r for r in out if r["straggler_factor"] == 4.0)
+    assert at4["async_slowdown"] is not None and \
+        at4["async_slowdown"] <= 1.5, \
+        f"async straggler tolerance regressed: {at4}"
+    assert at4["sync_slowdown"] is not None and \
+        at4["sync_slowdown"] >= 2.5, \
+        f"sync barrier unexpectedly straggler-tolerant: {at4}"
+    return out
+
+
 def run() -> list:
     rows: list[Row] = []
     results = sweep()
@@ -86,8 +187,17 @@ def run() -> list:
             r["wall_clock_s"] * 1e6,
             f"rounds={conv if conv is not None else 'n/a'} "
             f"speedup={speedup:.1f}x converged={r['converged']}"))
+    for r in straggler_sweep():
+        s, a = r["sync_slowdown"], r["async_slowdown"]
+        rows.append((
+            f"fleet_straggler_{r['straggler_factor']:g}x",
+            (r["async_wall_to_converge_s"] or 0.0) * 1e6,
+            f"sync_slowdown={s if s is None else format(s, '.2f')}x "
+            f"async_slowdown={a if a is None else format(a, '.2f')}x "
+            f"converged=[{r['converged']}]"))
     return rows
 
 
 if __name__ == "__main__":
-    print(json.dumps(sweep(), indent=2))
+    print(json.dumps({"batched_scaling": sweep(),
+                      "straggler": straggler_sweep()}, indent=2))

@@ -1,18 +1,27 @@
-"""Batched Thompson sampling over a device fleet: search-time speedup.
+"""Batched and asynchronous Thompson sampling over a device fleet.
 
-Runs Camel's configuration search twice against the *same* fleet — a
+Runs Camel's configuration search three ways against the *same* fleet — a
 `fleet/4xjetson/...` composite of 4 heterogeneous devices (2% persistent
 speed/power spread) behind one shared arrival queue — on the same fixed
 seed:
 
 * sequential — the paper's Algorithm 1 (`Controller`, one arm per round);
 * batched    — `BatchController` with K = 8 concurrent arms per round,
-  each round one vectorized `pull_many` dispatch across the devices.
+  each round one vectorized `pull_many` dispatch across the devices
+  behind a synchronous barrier (the round ends when the slowest device
+  finishes);
+* async      — `AsyncController` with K = fleet-size arms in flight
+  through the completion-ordered dispatcher: slots refill as devices
+  finish, late completions update the posterior staleness-inflated.
 
-The batched run needs ~K× fewer rounds of wall-clock environment
-evaluation to commit to the same best arm.
+The batched run needs ~K x fewer rounds of environment evaluation to
+commit to the same best arm; the async run additionally tolerates a
+straggler (--straggler S slows one device's *completions* S x without
+changing its telemetry) — its simulated wall-clock barely moves while the
+synchronous barrier would inherit the straggler every round.
 
     PYTHONPATH=src python examples/fleet_serving.py [--model qwen2.5-3b]
+    PYTHONPATH=src python examples/fleet_serving.py --straggler 4
 """
 
 import argparse
@@ -20,7 +29,7 @@ import math
 import time
 
 from repro.core import controller, cost, priors
-from repro.platform import make_env, make_space
+from repro.platform import barrier_walltimes, make_env, make_space
 
 
 def _setup(name: str, model: str, alpha: float, seed: int, **env_kw):
@@ -45,23 +54,28 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--jitter", type=float, default=0.02,
                     help="per-device speed/power spread (lognormal sigma)")
+    ap.add_argument("--straggler", type=float, default=1.0,
+                    help="device 0 returns results this many times slower "
+                         "on the async path (1.0 = homogeneous)")
     args = ap.parse_args()
 
     fleet_name = f"fleet/{args.devices}xjetson/{args.model}/landscape"
-    jitter = dict(speed_jitter=args.jitter, power_jitter=args.jitter)
+    env_kw = dict(speed_jitter=args.jitter, power_jitter=args.jitter,
+                  dispatch_factors=(args.straggler,)
+                  + (1.0,) * (args.devices - 1))
 
     # Sequential baseline: Algorithm 1, one pull per round.
     env, space, cm, opt_arm, opt_cost, policy = _setup(
-        fleet_name, args.model, 0.5, args.seed, **jitter)
+        fleet_name, args.model, 0.5, args.seed, **env_kw)
     ctrl = controller.Controller(space, policy, cm, optimal_cost=opt_cost,
                                  seed=args.seed)
     t0 = time.perf_counter()
     seq = ctrl.run(env, args.rounds)
     seq_s = time.perf_counter() - t0
 
-    # Batched: K concurrent arms per round across the fleet.
+    # Batched: K concurrent arms per synchronous-barrier round.
     fenv, space, cm, opt_arm, opt_cost, policy = _setup(
-        fleet_name, args.model, 0.5, args.seed, **jitter)
+        fleet_name, args.model, 0.5, args.seed, **env_kw)
     n_rounds = max(1, math.ceil(args.rounds / args.k))
     bctrl = controller.BatchController(space, policy, cm,
                                        optimal_cost=opt_cost,
@@ -69,19 +83,40 @@ def main() -> None:
     t0 = time.perf_counter()
     bat = bctrl.run(fenv, n_rounds)
     bat_s = time.perf_counter() - t0
+    bat_sim = float(barrier_walltimes(fenv, bat.n_rounds, args.k)[-1])
+
+    # Async: fleet-size arms in flight, completion-ordered updates.
+    aenv, space, cm, opt_arm, opt_cost, policy = _setup(
+        fleet_name, args.model, 0.5, args.seed, **env_kw)
+    a_rounds = max(1, math.ceil(args.rounds / args.devices))
+    actrl = controller.AsyncController(space, policy, cm,
+                                       optimal_cost=opt_cost,
+                                       seed=args.seed, k=args.devices)
+    t0 = time.perf_counter()
+    asy = actrl.run(aenv, a_rounds)
+    asy_s = time.perf_counter() - t0
+    asy_sim = float(asy.records[-1].obs.metadata["finished_at"])
+    staleness = [r.obs.metadata["staleness"] for r in asy.records]
 
     print(f"{'':12s} {'rounds':>7s} {'pulls':>6s} {'wall s':>7s} "
-          f"{'best (f, b)':>18s} {'optimal?':>8s}")
-    for label, res, secs in (("sequential", seq, seq_s),
-                             ("batched", bat, bat_s)):
+          f"{'sim clock s':>11s} {'best (f, b)':>18s} {'optimal?':>8s}")
+    for label, res, secs, sim in (("sequential", seq, seq_s, None),
+                                  ("batched", bat, bat_s, bat_sim),
+                                  ("async", asy, asy_s, asy_sim)):
         kb = res.best_knobs
+        sim_s = f"{sim:11.0f}" if sim is not None else f"{'n/a':>11s}"
         print(f"{label:12s} {res.n_rounds:7d} {len(res.records):6d} "
-              f"{secs:7.2f} ({kb['freq_mhz']:7.2f},{kb['batch']:3d}) "
-              f"{'yes' if res.best_arm == opt_arm else 'no':>8s}")
+              f"{secs:7.2f} {sim_s} ({kb['freq_mhz']:7.2f},{kb['batch']:3d})"
+              f" {'yes' if res.best_arm == opt_arm else 'no':>8s}")
     print(f"\nround speedup: {seq.n_rounds / bat.n_rounds:.1f}x fewer "
           f"environment-evaluation rounds "
           f"({args.devices} devices, K={args.k}, one vectorized "
           f"pull_many dispatch per round)")
+    print(f"async dispatch: {asy.n_rounds} completion waves, "
+          f"mean staleness {sum(staleness) / len(staleness):.2f}, "
+          f"max {max(staleness)}"
+          + (f" (straggler {args.straggler:g}x on device 0)"
+             if args.straggler != 1.0 else ""))
 
 
 if __name__ == "__main__":

@@ -17,6 +17,35 @@ the controller pulls argmin, observes a cost, and UPDATE recomputes the
 posterior of that arm from its full observation history (the paper's batch
 form, not the streaming one-sample form — both are provided).
 
+Observation-delay and staleness semantics
+-----------------------------------------
+Three delay regimes share one sufficient-statistics representation:
+
+* `update` — the synchronous case: the observation arrives before the next
+  selection, so the posterior the arm was drawn from is the posterior the
+  observation updates.
+* `update_batch` — bounded delay: K arms are selected from one *frozen*
+  posterior and all K observations arrive together before the next
+  selection (the BatchController round).  Bit-identical to K chained
+  `update` calls for distinct arms.
+* `update_stale` — unbounded delay: the observation arrives `staleness`
+  posterior-refresh events after its arm was selected (an asynchronous
+  completion queue, where a straggler device returns results selected
+  under a long-obsolete posterior).  The stale observation still enters
+  the arm's history at full weight for the *empirical mean* (it is a real
+  measurement), but its evidential weight in Eqs. 19-20 is discounted by
+  inflating the arm's effective observation variance:
+
+      sigma1_eff_i^2 = sigma1_i^2 * (1 + STALE_ETA * S_i / n_i)
+
+  where S_i is the arm's accumulated staleness (sum over its observations)
+  and n_i its observation count.  A fresh observation (staleness 0) leaves
+  S_i unchanged, so `update_stale(..., staleness=0)` is bit-identical to
+  `update` — which is what lets the asynchronous controller provably
+  recover the synchronous one on equal-speed devices.  Inflation keeps the
+  posterior conservative instead of poisoned: late evidence widens the
+  posterior it informs rather than sharpening it as if it were current.
+
 This module is a pure-functional JAX implementation: state is a pytree of
 arrays over the arm axis so that `sample`/`update` jit and vmap cleanly, and
 the controller loop can run either in Python (serving) or under lax.scan
@@ -40,6 +69,11 @@ Array = jax.Array
 _MIN_OBS_STD = 1e-3
 _MIN_PRIOR_STD = 1e-6
 
+#: Variance-inflation rate per unit of accumulated staleness (see module
+#: docstring): an arm whose observations are on average one refresh event
+#: stale carries (1 + STALE_ETA) x its measured observation variance.
+STALE_ETA = 0.5
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +90,7 @@ class TSState:
     count: Array       # n_i observations                   (i32[n])
     sum_x: Array       # sum of observed costs              (f32[n])
     sum_x2: Array      # sum of squared observed costs      (f32[n])
+    stale_n: Array     # accumulated observation staleness  (f32[n])
 
     @property
     def n_arms(self) -> int:
@@ -99,6 +134,7 @@ def init_state(
         count=jnp.zeros((n_arms,), jnp.int32),
         sum_x=zeros,
         sum_x2=zeros,
+        stale_n=zeros,
     )
 
 
@@ -171,11 +207,46 @@ def select_arms(state: TSState, key: Array, k: int,
 # UPDATE (Alg. 1 lines 15-18 + Eqs. 19-20)
 # ---------------------------------------------------------------------------
 
+def _posterior_all(state: TSState) -> Tuple[Array, Array]:
+    """Eqs. 19-20 recomputed for every arm from its sufficient statistics,
+    with the staleness inflation of the module docstring folded into the
+    observation precision.  `stale_n = 0` means an inflation factor of
+    exactly 1.0, so the synchronous paths are bit-identical to the
+    pre-staleness formulas."""
+    n = state.count.astype(jnp.float32)
+    xbar = state.sum_x / jnp.maximum(n, 1.0)
+    sigma1 = state.obs_std()
+    inflation = 1.0 + STALE_ETA * state.stale_n / jnp.maximum(n, 1.0)
+    xi1 = 1.0 / (sigma1 * sigma1 * inflation)
+    xi2 = 1.0 / (state.prior_sigma2 * state.prior_sigma2)
+
+    denom = n * xi1 + xi2
+    post_mu = (n * xi1 * xbar + state.prior_mu * xi2) / denom   # Eq. 19
+    post_sigma = jnp.sqrt(1.0 / denom)                          # Eq. 20
+    return post_mu, post_sigma
+
+
 def update(state: TSState, arm: Array, cost: Array) -> TSState:
     """Record `cost` for `arm` and recompute that arm's posterior from its
     full history against the *original* prior (the paper's batch update).
 
     Fully vectorized across arms via masking so it jits with traced `arm`.
+    """
+    return update_stale(state, arm, cost, 0.0)
+
+
+def update_stale(state: TSState, arm: Array, cost: Array,
+                 staleness: Array) -> TSState:
+    """Staleness-aware UPDATE for asynchronous completion-ordered loops.
+
+    `staleness` counts the posterior-refresh events that happened between
+    this arm's selection and this observation's arrival (0 = the
+    observation is fresh, i.e. the synchronous case — then this IS
+    `update`, bit for bit).  The cost enters the arm's history at full
+    weight, but the arm's accumulated staleness permanently inflates its
+    effective observation variance (see module docstring), so late
+    evidence widens the posterior it informs instead of sharpening it as
+    if it were current.
     """
     arm = jnp.asarray(arm)
     cost = jnp.asarray(cost, jnp.float32)
@@ -184,18 +255,11 @@ def update(state: TSState, arm: Array, cost: Array) -> TSState:
     count = state.count + onehot.astype(jnp.int32)
     sum_x = state.sum_x + onehot * cost
     sum_x2 = state.sum_x2 + onehot * cost * cost
+    stale_n = state.stale_n + onehot * jnp.asarray(staleness, jnp.float32)
 
-    tmp = dataclasses.replace(state, count=count, sum_x=sum_x, sum_x2=sum_x2)
-
-    n = count.astype(jnp.float32)
-    xbar = sum_x / jnp.maximum(n, 1.0)
-    sigma1 = tmp.obs_std()
-    xi1 = 1.0 / (sigma1 * sigma1)
-    xi2 = 1.0 / (state.prior_sigma2 * state.prior_sigma2)
-
-    denom = n * xi1 + xi2
-    post_mu = (n * xi1 * xbar + state.prior_mu * xi2) / denom   # Eq. 19
-    post_sigma = jnp.sqrt(1.0 / denom)                          # Eq. 20
+    tmp = dataclasses.replace(state, count=count, sum_x=sum_x,
+                              sum_x2=sum_x2, stale_n=stale_n)
+    post_mu, post_sigma = _posterior_all(tmp)
 
     # Only the pulled arm's posterior changes.
     new_mu = jnp.where(onehot, post_mu, state.mu)
@@ -233,15 +297,7 @@ def update_batch(state: TSState, arms: Array, costs: Array) -> TSState:
     sum_x2 = state.sum_x2 + d_sum2
     tmp = dataclasses.replace(state, count=count, sum_x=sum_x, sum_x2=sum_x2)
 
-    nf = count.astype(jnp.float32)
-    xbar = sum_x / jnp.maximum(nf, 1.0)
-    sigma1 = tmp.obs_std()
-    xi1 = 1.0 / (sigma1 * sigma1)
-    xi2 = 1.0 / (state.prior_sigma2 * state.prior_sigma2)
-
-    denom = nf * xi1 + xi2
-    post_mu = (nf * xi1 * xbar + state.prior_mu * xi2) / denom   # Eq. 19
-    post_sigma = jnp.sqrt(1.0 / denom)                           # Eq. 20
+    post_mu, post_sigma = _posterior_all(tmp)
 
     new_mu = jnp.where(touched, post_mu, state.mu)
     new_sigma = jnp.where(touched, post_sigma, state.sigma2)

@@ -24,7 +24,11 @@ class Policy(Protocol):
     batched pair `select_many(state, key, t, k) -> i32[k]` and
     `update_batch(state, arms, costs) -> state` — the BatchController uses
     them for K-wide rounds with delayed feedback and falls back to
-    repeated scalar calls otherwise."""
+    repeated scalar calls otherwise — and the asynchronous hook
+    `update_stale(state, arm, cost, staleness) -> state`, which the
+    AsyncController calls per completion with the number of posterior
+    refreshes that happened since the arm was selected (policies without
+    it get the plain `update`, i.e. staleness is ignored)."""
 
     def init(self, n_arms: int): ...
     def select(self, state, key: Array, t: Array) -> Array: ...
@@ -218,6 +222,16 @@ class CamelTS:
             return state
         return bandit.update_batch(state, arms, costs)
 
+    def update_stale(self, state: bandit.TSState, arm: Array, cost: Array,
+                     staleness: float) -> bandit.TSState:
+        """Asynchronous-completion update: staleness-inflated Eqs. 19-20
+        (`bandit.update_stale`; staleness 0 == the synchronous update
+        bit-for-bit).  The streaming variant has no full-history form to
+        inflate, so it falls back to ignoring staleness."""
+        if self.streaming:
+            return bandit.update_streaming(state, arm, cost)
+        return bandit.update_stale(state, arm, cost, staleness)
+
 
 class CamelWindowedTS:
     """Sliding-window Camel for non-stationary workloads (beyond paper)."""
@@ -245,6 +259,14 @@ class CamelWindowedTS:
 
     def update_batch(self, state, arms: Array, costs: Array):
         return bandit.windowed_update_batch(state, arms, costs)
+
+    def update_stale(self, state, arm: Array, cost: Array, staleness: float):
+        """The sliding window already discounts old evidence by recency of
+        *update*, which is exactly when a late completion lands — so the
+        windowed sampler absorbs stale observations without extra
+        inflation."""
+        del staleness
+        return bandit.windowed_update(state, arm, cost)
 
 
 POLICIES = {

@@ -15,6 +15,22 @@ applies a single delayed batch update.  `Controller` is the K=1 special
 case of the same loop — not a separate code path — so the paper's
 one-pull-per-round Algorithm 1 falls out as `BatchController(k=1)`
 bit-for-bit.
+
+Observation-delay and staleness semantics across the three loops
+----------------------------------------------------------------
+* `Controller` — zero delay: each observation updates the posterior it
+  was selected from.
+* `BatchController` — bounded delay, synchronous barrier: K observations
+  selected from one frozen posterior arrive together; a straggler device
+  stalls the whole round, but no observation is ever stale.
+* `AsyncController` — completion-ordered: K arms stay in flight through a
+  completion queue; slots refill as devices finish, so a straggler delays
+  only the pulls it serves.  An observation that arrives `s`
+  posterior-refresh events after its arm was selected is applied through
+  the policy's `update_stale(arm, cost, s)` hook (variance inflation —
+  see core.bandit), and `s = 0` reduces to the synchronous update, which
+  is why an equal-speed fleet reproduces `BatchController` exactly
+  (bit-identical records when K equals the device count).
 """
 
 from __future__ import annotations
@@ -155,21 +171,27 @@ class BatchController:
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
 
     def _select_round(self, state, key, t: int) -> List[int]:
-        if self.k == 1:
+        return self._select_group(state, key, t, self.k)
+
+    def _select_group(self, state, key, t: int, width: int) -> List[int]:
+        """Select `width` arms from the frozen posterior with one round
+        key — the full-round case (width = K) and the async partial-refill
+        case share this path so their key chains line up."""
+        if width == 1:
             # Scalar fast path: pass the round key straight to select so
             # the K=1 loop reproduces the sequential controller exactly.
             return [int(self.policy.select(state, key, jnp.asarray(t + 1)))]
         fn = getattr(self.policy, "select_many", None)
         if fn is not None:
             return [int(a) for a in fn(state, key, jnp.asarray(t + 1),
-                                       self.k)]
-        # Generic fallback: K scalar selects against the frozen state with
+                                       width)]
+        # Generic fallback: scalar selects against the frozen state with
         # split keys.  With-replacement — duplicate slots are possible for
         # policies without a batched form.
-        subs = jax.random.split(key, self.k)
+        subs = jax.random.split(key, width)
         return [int(self.policy.select(state, subs[i],
                                        jnp.asarray(t + 1 + i)))
-                for i in range(self.k)]
+                for i in range(width)]
 
     def _update_round(self, state, arms: List[int], costs: List[float]):
         fn = getattr(self.policy, "update_batch", None)
@@ -208,25 +230,126 @@ class Controller(BatchController):
                          optimal_cost=optimal_cost, seed=seed, k=1)
 
 
-def committed_best_history(records: List[RoundRecord], k: int,
-                           prior_mu, n_arms: int) -> List[int]:
-    """The arm the controller would commit to after each K-wide round,
-    reconstructed from the run's records with the same empirical rule as
+class AsyncController(BatchController):
+    """Straggler-tolerant asynchronous MAIN loop: K arms in flight through
+    a completion-ordered dispatcher instead of K arms behind a round
+    barrier.
+
+    Event loop: whenever slots are free (and pull budget remains), select
+    that many arms from the current posterior with one round key and
+    submit them to `repro.platform.open_dispatcher(env)`; then drain the
+    next completion *wave* (all pulls finishing at the earliest
+    outstanding instant) and apply each completion through the policy's
+    `update_stale(arm, cost, staleness)` hook, where staleness counts the
+    posterior-refresh events between the arm's selection and its arrival.
+    A slow device therefore delays only the pulls it serves — the fast
+    devices keep selecting from a posterior that is at most one wave old —
+    and its late observations enter the posterior variance-inflated
+    rather than poisoning it (`bandit.update_stale`).
+
+    Equivalence: on a fleet whose devices share one pull duration (equal
+    dispatch factors) and with K equal to the device count, every refill
+    is a full K-wide group, every wave returns all K together, and every
+    staleness is 0 — the loop is then *bit-identical* to
+    `BatchController.run` (same key chain, same device assignment via the
+    dispatcher's rotation tie-break, same update arithmetic), which the
+    tests assert record-for-record.
+
+    `run(env, n_rounds)` keeps the usual budget semantics: n_rounds
+    rounds of width K = ``n_rounds * k`` total pulls.  Each record's
+    `round`/`slot` are its completion wave and position within it, and
+    its `obs.metadata` gains `submitted_at` / `finished_at` (the
+    dispatcher's simulated clock) and `staleness`.
+    """
+
+    def run(self, env: Environment, n_rounds: int) -> ControllerResult:
+        from repro.platform.registry import open_dispatcher  # lazy: cycle
+
+        budget = n_rounds * self.k
+        disp = open_dispatcher(env)
+        state = self.policy.init(self.space.n_arms)
+        regret = RegretTracker(self.optimal_cost
+                               if self.optimal_cost is not None else 0.0)
+        records: List[RoundRecord] = []
+        in_flight: Dict[int, Tuple[int, Dict, int]] = {}
+        submitted = completed = 0
+        events = 0            # posterior-refresh events (waves applied)
+
+        while completed < budget:
+            n_new = min(self.k - len(in_flight), budget - submitted)
+            if n_new > 0:
+                self.key, sub = jax.random.split(self.key)
+                arms = self._select_group(state, sub, submitted, n_new)
+                for a in arms:
+                    knobs = self.space.values(a)
+                    ticket = disp.submit(knobs, submitted)
+                    in_flight[ticket] = (a, knobs, events)
+                    submitted += 1
+            wave = disp.pop_wave()
+            for slot, comp in enumerate(wave):
+                arm, knobs, epoch = in_flight.pop(comp.ticket)
+                obs = comp.obs
+                c = float(self.cost_model.cost(obs.energy, obs.latency))
+                staleness = events - epoch
+                state = self._update_stale(state, arm, c, staleness)
+                r = regret.record(c) if self.optimal_cost is not None else 0.0
+                records.append(RoundRecord(
+                    t=completed, arm=arm, knobs=knobs, energy=obs.energy,
+                    latency=obs.latency, cost=c, regret=float(r),
+                    obs=dataclasses.replace(
+                        obs, metadata={**obs.metadata,
+                                       "submitted_at": comp.submitted_at,
+                                       "finished_at": comp.finished_at,
+                                       "staleness": staleness}),
+                    round=events, slot=slot))
+                completed += 1
+            events += 1
+
+        best_arm = self._commit(state, records)
+        return ControllerResult(
+            records=records, final_state=state, best_arm=best_arm,
+            best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
+
+    def _update_stale(self, state, arm: int, cost: float, staleness: int):
+        fn = getattr(self.policy, "update_stale", None)
+        if fn is not None:
+            return fn(state, jnp.asarray(arm),
+                      jnp.asarray(cost, jnp.float32), float(staleness))
+        # Policies without a staleness notion (grid, UCB, ...) treat late
+        # observations as fresh.
+        return self.policy.update(state, jnp.asarray(arm),
+                                  jnp.asarray(cost, jnp.float32))
+
+
+def _per_record_commit_history(records: List[RoundRecord], prior_mu,
+                               n_arms: int) -> np.ndarray:
+    """The arm the controller would commit to after each individual pull,
+    reconstructed with the same empirical rule as
     `BatchController._commit` for mean-cost states (argmin of mean
-    observed cost, prior mean where unpulled).  Shared by the E10
-    benchmark and the convergence tests so the measured quantity cannot
-    drift from the controller's actual commit behavior."""
+    observed cost, prior mean where unpulled).  The ONE copy of that
+    reconstruction: `committed_best_history` samples it at round
+    boundaries and `walltime_to_converge` reads it per completion, so the
+    measured quantities cannot drift from the controller's actual commit
+    behavior (or from each other)."""
     cnt = np.zeros(n_arms)
     s = np.zeros(n_arms)
     prior = np.broadcast_to(np.asarray(prior_mu, float), (n_arms,))
-    hist: List[int] = []
-    for rec in records:
+    hist = np.empty(len(records), dtype=int)
+    for i, rec in enumerate(records):
         cnt[rec.arm] += 1
         s[rec.arm] += rec.cost
-        if rec.slot == k - 1:
-            mean = np.where(cnt > 0, s / np.maximum(cnt, 1), prior)
-            hist.append(int(np.argmin(mean)))
+        mean = np.where(cnt > 0, s / np.maximum(cnt, 1), prior)
+        hist[i] = int(np.argmin(mean))
     return hist
+
+
+def committed_best_history(records: List[RoundRecord], k: int,
+                           prior_mu, n_arms: int) -> List[int]:
+    """The committed arm after each K-wide round (the per-record commit
+    history sampled at each round's last slot)."""
+    hist = _per_record_commit_history(records, prior_mu, n_arms)
+    return [int(hist[i]) for i, rec in enumerate(records)
+            if rec.slot == k - 1]
 
 
 def rounds_to_converge(records: List[RoundRecord], k: int, opt_arm: int,
@@ -238,6 +361,35 @@ def rounds_to_converge(records: List[RoundRecord], k: int, opt_arm: int,
         if all(b == opt_arm for b in hist[i:]):
             return i + 1
     return None
+
+
+def record_clocks(records: List[RoundRecord]) -> np.ndarray:
+    """Per-record completion clock of an `AsyncController` run (the
+    dispatcher's simulated `finished_at` each record's observation was
+    stamped with)."""
+    return np.array([r.obs.metadata["finished_at"] for r in records])
+
+
+def walltime_to_converge(records: List[RoundRecord], clocks,
+                         opt_arm: int, prior_mu, n_arms: int
+                         ) -> Optional[float]:
+    """Simulated wall-clock at which the run's commit settles on
+    `opt_arm`: the committed-best rule (same empirical argmin as
+    `committed_best_history`) is re-evaluated after *every* completion,
+    and the answer is the clock of the first completion after which it
+    never leaves `opt_arm`.  `clocks` aligns with `records` — use
+    `record_clocks` for async runs, or expand
+    `platform.fleet.barrier_walltimes` per slot for synchronous-barrier
+    runs (every slot of a sync round completes when its barrier
+    releases).  None if the run never settles on `opt_arm`."""
+    hist = _per_record_commit_history(records, prior_mu, n_arms)
+    clocks = np.asarray(clocks, float)
+    settled = None
+    for i in range(len(hist) - 1, -1, -1):
+        if hist[i] != opt_arm:
+            break
+        settled = float(clocks[i])
+    return settled
 
 
 def landscape_optimal(space: ArmSpace,

@@ -20,12 +20,21 @@ Modes:
                    one shared arrival queue (fleet/<n>xjetson registry
                    platform), K = fleet size slots per round; --rounds is
                    the pull budget in every mode
+  --mode async-fleet  the same fleet without the round barrier: K arms in
+                   flight through the completion-ordered dispatcher,
+                   per-completion staleness-aware posterior updates;
+                   --straggler S makes device 0 return results S x slower
+                   (its telemetry is unchanged — the pulls just arrive
+                   late and stale).  Reports the simulated wall-clock and
+                   the staleness distribution alongside the usual summary.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --mode search \
         --model llama3.2-1b --rounds 49
     PYTHONPATH=src python -m repro.launch.serve --mode fleet \
         --model llama3.2-1b --fleet-size 4 --rounds 49
+    PYTHONPATH=src python -m repro.launch.serve --mode async-fleet \
+        --model llama3.2-1b --fleet-size 4 --rounds 49 --straggler 4
 """
 
 from __future__ import annotations
@@ -165,10 +174,51 @@ def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     return out
 
 
+def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
+                     n_devices: int, k: int = 0,
+                     straggler: float = 1.0) -> dict:
+    """Asynchronous Camel search over an N-device fleet: K arms in flight
+    through the completion-ordered dispatcher (default K = fleet size),
+    per-completion staleness-aware posterior updates instead of a round
+    barrier.  `straggler` slows device 0's *completions* by that factor
+    without changing its telemetry; `rounds` is the pull budget, as in
+    every other mode."""
+    k = k if k > 0 else n_devices
+    name = f"fleet/{n_devices}xjetson/{model}/landscape"
+    dispatch = (straggler,) + (1.0,) * (n_devices - 1)
+    env_kw = dict(noise=0.03, seed=seed, dispatch_factors=dispatch)
+    env = make_env(name, **env_kw)
+    space = make_space(name)
+    cm = cost.CostModel(alpha=alpha)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+
+    policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
+    ctrl = controller.AsyncController(space, policy, cm,
+                                      optimal_cost=opt_cost, seed=seed, k=k)
+    res = ctrl.run(make_env(name, **env_kw), max(1, math.ceil(rounds / k)))
+    out = res.summary()
+    staleness = [r.obs.metadata["staleness"] for r in res.records]
+    out["optimal_knobs"] = space.values(opt_arm)
+    out["found_optimal"] = bool(res.best_arm == opt_arm)
+    out["n_devices"] = n_devices
+    out["k"] = k
+    out["straggler"] = straggler
+    out["n_waves"] = res.n_rounds
+    out["n_pulls"] = len(res.records)
+    out["wall_clock_sim_s"] = float(
+        res.records[-1].obs.metadata["finished_at"])
+    out["mean_staleness"] = float(sum(staleness) / len(staleness))
+    out["max_staleness"] = int(max(staleness))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["search", "validate", "engine",
-                                       "tpu", "fleet"], default="search")
+                                       "tpu", "fleet", "async-fleet"],
+                    default="search")
     ap.add_argument("--model", default="llama3.2-1b")
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--rounds", type=int, default=49)
@@ -180,6 +230,10 @@ def main() -> None:
                          "Thompson sampling); 0 = auto (1, or the fleet "
                          "size in fleet mode)")
     ap.add_argument("--fleet-size", type=int, default=4)
+    ap.add_argument("--straggler", type=float, default=1.0,
+                    help="async-fleet: device 0 returns results this many "
+                         "times slower (telemetry unchanged; 1.0 = "
+                         "homogeneous)")
     args = ap.parse_args()
 
     if args.mode == "search":
@@ -193,6 +247,10 @@ def main() -> None:
     elif args.mode == "fleet":
         out = fleet_mode(args.model, args.rounds, args.alpha, args.seed,
                          args.fleet_size, k=args.k)
+    elif args.mode == "async-fleet":
+        out = async_fleet_mode(args.model, args.rounds, args.alpha,
+                               args.seed, args.fleet_size, k=args.k,
+                               straggler=args.straggler)
     else:
         out = tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
     print(json.dumps(out, indent=2, default=str))

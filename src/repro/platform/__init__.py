@@ -9,23 +9,34 @@ every hardware backend.
   model.
 * `make_env` / `make_space` / `pull_many` (registry.py): construct any
   backend by name, e.g. ``make_env("jetson/llama3.2-1b/landscape")``.
+* `AsyncDispatcher` / `Completion` (base.py) with `open_dispatcher` /
+  `pull_async` (registry.py): the asynchronous completion-queue path —
+  pulls return in finish order instead of behind a round barrier, and a
+  straggler device delays only the slots it serves.
 
-See docs/ENVIRONMENTS.md for the full contract and how to add a backend.
+See docs/ENVIRONMENTS.md for the full contract and how to add a backend,
+and docs/ARCHITECTURE.md for the sync vs async dispatch timelines.
 """
 
-from repro.platform.base import (BaseEnvironment, DVFSPlatform, Platform,
-                                 TPUPlatform, as_platform)
-from repro.platform.fleet import FleetEnv, make_fleet, merge_observations
+from repro.platform.base import (AsyncDispatcher, BaseEnvironment,
+                                 Completion, DVFSPlatform, Platform,
+                                 TPUPlatform, as_platform,
+                                 measurement_horizon)
+from repro.platform.fleet import (FleetEnv, barrier_walltimes, make_fleet,
+                                  merge_observations)
 from repro.platform.registry import (available_envs, make_env, make_space,
-                                     parse_name, pull_many, register_env)
+                                     open_dispatcher, parse_name, pull_async,
+                                     pull_many, register_env)
 from repro.platform.telemetry import (Observation, QueueingLatency, observe,
                                       queue_wait, queueing_latency,
                                       saturation_backlog)
 
 __all__ = [
-    "BaseEnvironment", "DVFSPlatform", "FleetEnv", "Platform", "TPUPlatform",
-    "as_platform", "available_envs", "make_env", "make_fleet", "make_space",
-    "merge_observations", "parse_name", "pull_many", "register_env",
+    "AsyncDispatcher", "BaseEnvironment", "Completion", "DVFSPlatform",
+    "FleetEnv", "Platform", "TPUPlatform", "as_platform", "available_envs",
+    "barrier_walltimes", "make_env", "make_fleet", "make_space",
+    "measurement_horizon", "merge_observations", "open_dispatcher",
+    "parse_name", "pull_async", "pull_many", "register_env",
     "Observation", "QueueingLatency", "observe", "queue_wait",
     "queueing_latency", "saturation_backlog",
 ]

@@ -14,11 +14,37 @@ map to clocks and power.  `Platform` pins that seam down:
 (`serving.energy.DVFSBoard`, `serving.energy.TPUChip`) onto the contract
 without this package importing `repro.serving` (the adapters duck-type, so
 there is no import cycle and third-party boards plug in the same way).
+
+Observation-delay semantics (sync vs async evaluation)
+------------------------------------------------------
+Environments expose two evaluation paths with different delay contracts:
+
+* `pull` / `pull_many` — synchronous: the caller blocks until every slot's
+  observation is available; a K-wide round is a *barrier*, released only
+  when the slowest device finishes (slot i is logical round
+  ``round_index + i`` on both paths; see registry.pull_many).
+* `AsyncDispatcher` (below) — asynchronous: `submit` hands a pull to a
+  worker and returns immediately; results come back through a completion
+  queue in *finish order*, not submission order.  A pull submitted under
+  one posterior may complete many posterior refreshes later — that delay
+  is the `staleness` the bandit's `update_stale` discounts for.
+
+The dispatcher here is a deterministic simulated event clock: a pull's
+observation is computed eagerly at submission (the simulation backends are
+deterministic given device, knobs, and logical round) but *delivered* at
+``start + duration`` on the worker's timeline, where the duration is the
+arm-measurement horizon of the device (a pull observes a fixed arrival
+window, so its wall-clock is arrival- not service-dominated — see
+`measurement_horizon`).  A real deployment would replace this class with a
+thread/process pool whose completions arrive from actual hardware; the
+controller only ever sees the `submit` / `pop_wave` contract.
 """
 
 from __future__ import annotations
 
-from typing import List, Protocol, Sequence, Tuple, runtime_checkable
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
+    runtime_checkable
 
 from repro.platform.telemetry import Observation
 
@@ -159,3 +185,125 @@ class BaseEnvironment:
         dynamics depend on the round."""
         return [Observation.of(self.pull(k, round_index + i))
                 for i, k in enumerate(knobs_list)]
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous completion-ordered dispatch
+# ---------------------------------------------------------------------------
+
+
+def measurement_horizon(env) -> float:
+    """Simulated wall-clock one arm pull occupies a device.
+
+    A pull is a *measurement*: it observes a fixed arrival window (the
+    landscape scenarios integrate over `n_requests` arrivals at
+    `arrival_rate`; the events scenario replays `requests_per_pull`
+    arrivals spaced `interval_s`), so to first order its duration is the
+    arrival horizon, independent of the arm — we deliberately ignore the
+    saturated-arm service tail.  Environments without arrival bookkeeping
+    get one logical slot tick per pull."""
+    rate = getattr(env, "arrival_rate", None)
+    n = getattr(env, "n_requests", None)
+    if rate and n:
+        return float(n) / float(rate)
+    interval = getattr(env, "interval_s", None)
+    per_pull = getattr(env, "requests_per_pull", None)
+    if interval and per_pull:
+        return float(interval) * float(per_pull)
+    return 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    """One finished asynchronous pull, as delivered by the completion
+    queue: which worker served it, what it observed, and when on the
+    simulated timeline it was submitted and finished."""
+
+    ticket: int               # submission order (0-based, globally unique)
+    worker: int               # device/worker index that served the pull
+    knobs: Dict[str, object]  # the arm's knob values
+    obs: Observation          # what the pull observed
+    submitted_at: float       # dispatcher clock at submission
+    finished_at: float        # dispatcher clock at completion
+
+
+class AsyncDispatcher:
+    """Completion-ordered dispatch of arm pulls over an environment's
+    workers — the asynchronous counterpart of `registry.pull_many`.
+
+    Workers map to fleet devices (`env.n_devices`, pulls evaluated via
+    `env.pull_on`) or to a single logical worker for plain environments
+    (`env.pull`).  `submit(knobs, logical_round)` assigns the pull to the
+    worker that can start it earliest — ties broken by a rotation that
+    advances one worker per completion wave, matching `FleetEnv`'s
+    synchronous round-robin so the two dispatch paths agree device-by-
+    device on homogeneous fleets — and schedules its completion at
+    ``start + duration`` (per-worker duration: `env.pull_duration(d)` when
+    available, else `measurement_horizon(env)`).  `pop_wave()` advances
+    the clock to the earliest outstanding completion and returns *all*
+    completions sharing that finish time, in submission order: on an
+    equal-speed fleet a full-width submission group returns as one wave,
+    which is exactly the synchronous barrier — stragglers make waves
+    ragged instead of stalling them.
+    """
+
+    def __init__(self, env, n_workers: Optional[int] = None):
+        self.env = env
+        self.n_workers = int(n_workers or getattr(env, "n_devices", 1))
+        if self.n_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {self.n_workers}")
+        self.clock = 0.0
+        self._free_at = [0.0] * self.n_workers
+        self._pending: List[Completion] = []
+        self._tickets = 0
+        self._waves = 0
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+    def _duration(self, worker: int) -> float:
+        fn = getattr(self.env, "pull_duration", None)
+        if fn is not None:
+            return float(fn(worker))
+        return measurement_horizon(self.env)
+
+    def _evaluate(self, worker: int, knobs: Dict, logical_round: int
+                  ) -> Observation:
+        fn = getattr(self.env, "pull_on", None)
+        if fn is not None:
+            return Observation.of(fn(worker, knobs, logical_round))
+        return Observation.of(self.env.pull(knobs, logical_round))
+
+    def submit(self, knobs: Dict, logical_round: int) -> int:
+        """Dispatch one pull; returns its ticket.  The observation is
+        computed eagerly (deterministic simulation) but only delivered by
+        `pop_wave` once the worker's timeline reaches its finish."""
+        starts = [max(self._free_at[w], self.clock)
+                  for w in range(self.n_workers)]
+        w = min(range(self.n_workers),
+                key=lambda d: (starts[d], (d - self._waves) % self.n_workers))
+        start = starts[w]
+        finish = start + self._duration(w)
+        self._free_at[w] = finish
+        obs = self._evaluate(w, knobs, logical_round)
+        comp = Completion(ticket=self._tickets, worker=w, knobs=dict(knobs),
+                          obs=obs, submitted_at=self.clock,
+                          finished_at=finish)
+        self._pending.append(comp)
+        self._tickets += 1
+        return comp.ticket
+
+    def pop_wave(self) -> List[Completion]:
+        """Advance the clock to the earliest outstanding completion and
+        return every completion finishing at that instant (submission
+        order).  Raises if nothing is in flight."""
+        if not self._pending:
+            raise RuntimeError("pop_wave with no pulls in flight")
+        t = min(c.finished_at for c in self._pending)
+        wave = sorted((c for c in self._pending if c.finished_at == t),
+                      key=lambda c: c.ticket)
+        self._pending = [c for c in self._pending if c.finished_at != t]
+        self.clock = t
+        self._waves += 1
+        return wave

@@ -21,6 +21,23 @@ via `make_fleet`.  `merge_observations` folds one round's per-device
 observations into fleet totals (requests, joules, tokens and power add up;
 latency is request-weighted) for fleet-level summaries and conservation
 checks.
+
+Observation-delay semantics: dispatch is synchronous or asynchronous
+--------------------------------------------------------------------
+`pull_many` is the *synchronous* path: a K-wide round is a barrier —
+every slot's observation is returned together, so the round's wall-clock
+is the slowest device's busy time (`barrier_walltimes` reconstructs that
+timeline for a recorded run).  The *asynchronous* path goes through
+`platform.base.AsyncDispatcher` via two per-device hooks defined here:
+`pull_on(d, knobs, logical_round)` evaluates one slot on one device
+(using the device's vectorized hook when it declares round-independence,
+so both paths produce identical numbers), and `pull_duration(d)` is the
+simulated wall-clock one pull occupies device d — its measurement horizon
+times `dispatch_factors[d]`.  `dispatch_factors` model *stragglers*:
+a device that is slow to return results (contention, thermal throttling,
+restarts) without its serving telemetry changing — the observation is the
+same, it just arrives late, and late observations carry staleness the
+bandit discounts for (`bandit.update_stale`).
 """
 
 from __future__ import annotations
@@ -30,7 +47,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.platform.base import BaseEnvironment
+from repro.platform.base import BaseEnvironment, measurement_horizon
 from repro.platform.telemetry import Observation
 
 
@@ -89,17 +106,26 @@ class FleetEnv(BaseEnvironment):
 
     `speed_factors[d]` multiplies device d's latency and energy;
     `power_factors[d]` multiplies its energy only (see module docstring).
+    `dispatch_factors[d]` multiplies how long device d takes to *return*
+    a pull on the asynchronous path (straggler modeling) without touching
+    its observed telemetry.
     """
 
     def __init__(self, devices: Sequence, speed_factors: Sequence[float],
-                 power_factors: Sequence[float], name: str = "fleet"):
+                 power_factors: Sequence[float], name: str = "fleet",
+                 dispatch_factors: Optional[Sequence[float]] = None):
         if not devices:
             raise ValueError("a fleet needs at least one device")
         if not (len(devices) == len(speed_factors) == len(power_factors)):
             raise ValueError("per-device factor lengths must match devices")
+        if dispatch_factors is None:
+            dispatch_factors = [1.0] * len(devices)
+        if len(dispatch_factors) != len(devices):
+            raise ValueError("per-device factor lengths must match devices")
         self.devices = list(devices)
         self.speed_factors = tuple(float(s) for s in speed_factors)
         self.power_factors = tuple(float(p) for p in power_factors)
+        self.dispatch_factors = tuple(float(f) for f in dispatch_factors)
         self.name = name
         self.platform = getattr(self.devices[0], "platform", None)
 
@@ -121,6 +147,31 @@ class FleetEnv(BaseEnvironment):
     def pull(self, knobs: dict, round_index: int) -> Observation:
         d = round_index % self.n_devices
         return self._device_obs(d, self.devices[d].pull(knobs, round_index))
+
+    def pull_on(self, d: int, knobs: dict, logical_round: int
+                ) -> Observation:
+        """Evaluate one slot on device `d` — the asynchronous dispatch
+        hook.  Uses the device's own vectorized `pull_many` (one-slot
+        call) under the same round-independence rule as the synchronous
+        path, so a pull produces identical numbers whichever dispatcher
+        routed it."""
+        dev = self.devices[d]
+        fn = getattr(type(dev), "pull_many", None)
+        if (fn is not None and fn is not BaseEnvironment.pull_many
+                and getattr(dev, "round_independent", False)):
+            obs = Observation.of(dev.pull_many([knobs], logical_round)[0])
+        else:
+            obs = Observation.of(dev.pull(knobs, logical_round))
+        return self._device_obs(d, obs)
+
+    def pull_duration(self, d: int) -> float:
+        """Simulated wall-clock one pull occupies device `d`: the device's
+        arm-measurement horizon (arrival-dominated; see
+        `platform.base.measurement_horizon`) times its dispatch factor.
+        Arm-independent by design — which is what makes the asynchronous
+        dispatcher provably collapse to the synchronous barrier on
+        homogeneous fleets."""
+        return measurement_horizon(self.devices[d]) * self.dispatch_factors[d]
 
     def pull_many(self, knobs_list: Sequence[dict], round_index: int = 0
                   ) -> List[Observation]:
@@ -164,9 +215,31 @@ class FleetEnv(BaseEnvironment):
             for d, dev in enumerate(self.devices)])
 
 
+def barrier_walltimes(env: FleetEnv, n_rounds: int, k: int) -> np.ndarray:
+    """Cumulative simulated wall-clock at which each *synchronous* K-wide
+    round's barrier releases: a round ends when its slowest device drains
+    its slots (slot i of round r goes to device ``(i + r) mod N``, each
+    occupying the device for `pull_duration(d)`).  This is the timeline
+    the async dispatcher's completion clock is compared against in the
+    straggler benchmarks — with one slow device the barrier inherits its
+    dispatch factor every round, while the async path only waits for it
+    on the slots it actually serves."""
+    clocks = np.empty(n_rounds)
+    t = 0.0
+    for r in range(n_rounds):
+        busy = np.zeros(env.n_devices)
+        for i in range(k):
+            d = (i + r) % env.n_devices
+            busy[d] += env.pull_duration(d)
+        t += busy.max()
+        clocks[r] = t
+    return clocks
+
+
 def make_fleet(n: int, platform: str, model: str, scenario: str, *,
                seed: int = 0, speed_jitter: float = 0.05,
                power_jitter: float = 0.05,
+               dispatch_factors: Optional[Sequence[float]] = None,
                arrival_rate: Optional[float] = None, **kw) -> FleetEnv:
     """Build an N-device fleet of ``<platform>/<model>/<scenario>`` backends
     behind one shared arrival queue.
@@ -176,8 +249,10 @@ def make_fleet(n: int, platform: str, model: str, scenario: str, *,
     device is constructed to drain 1/n of it.  Device d gets `seed + d`
     for its own observation noise, plus persistent lognormal speed/power
     offsets drawn from the fleet seed (sigma = `speed_jitter` /
-    `power_jitter`).  Remaining keywords pass through to every device's
-    constructor."""
+    `power_jitter`).  `dispatch_factors` (default: all 1.0) make devices
+    stragglers on the asynchronous path — device d returns each pull
+    ``dispatch_factors[d]`` times slower without its telemetry changing.
+    Remaining keywords pass through to every device's constructor."""
     from repro.platform.registry import make_env
 
     if n < 1:
@@ -195,4 +270,5 @@ def make_fleet(n: int, platform: str, model: str, scenario: str, *,
     devices = [make_env(f"{platform}/{model}/{scenario}", seed=seed + d,
                         **per_device) for d in range(n)]
     return FleetEnv(devices, speed, power,
-                    name=f"fleet/{n}x{platform}/{model}/{scenario}")
+                    name=f"fleet/{n}x{platform}/{model}/{scenario}",
+                    dispatch_factors=dispatch_factors)

@@ -16,10 +16,14 @@ see `repro.platform.fleet`.
 
 `make_env` returns the environment; `make_space` the matching ArmSpace;
 `pull_many` evaluates a batch of knob dicts through an environment's
-batched hook (or the sequential fallback).  Builders take keyword
-overrides (noise=, seed=, arrival_rate=, ...) which pass straight through
-to the environment constructor, so benchmarks and examples construct any
-backend by name without importing its module.
+batched hook (or the sequential fallback).  `open_dispatcher` /
+`pull_async` are the asynchronous counterparts: completion-ordered
+dispatch through `platform.base.AsyncDispatcher`, where results return in
+finish order rather than behind a round barrier (see the delay/staleness
+contracts in base.py).  Builders take keyword overrides (noise=, seed=,
+arrival_rate=, ...) which pass straight through to the environment
+constructor, so benchmarks and examples construct any backend by name
+without importing its module.
 
 New backends register with `register_env("myboard", "landscape")` and are
 immediately constructible everywhere — the bandit core never changes.
@@ -191,6 +195,41 @@ def pull_many(env, knobs_list: Sequence[dict], round_index: int = 0
         return [Observation.of(o) for o in fn(knobs_list, round_index)]
     return [Observation.of(env.pull(k, round_index + i))
             for i, k in enumerate(knobs_list)]
+
+
+def open_dispatcher(env, n_workers: int = None):
+    """Open the asynchronous completion-queue path onto `env`.
+
+    Uses the environment's own `open_dispatch()` hook when it defines one
+    (third-party backends with real worker pools), else the simulated
+    event-clock `AsyncDispatcher` with one worker per fleet device (or a
+    single worker for plain environments)."""
+    from repro.platform.base import AsyncDispatcher
+
+    fn = getattr(env, "open_dispatch", None)
+    if fn is not None:
+        return fn() if n_workers is None else fn(n_workers=n_workers)
+    return AsyncDispatcher(env, n_workers=n_workers)
+
+
+def pull_async(env, knobs_list: Sequence[dict], round_index: int = 0,
+               n_workers: int = None) -> List:
+    """Asynchronous counterpart of `pull_many`: evaluate the batch through
+    the completion queue and return `Completion`s in *finish order* (ties
+    in submission order), not slot order.
+
+    Contract: slot i is still logical round ``round_index + i`` — the
+    delay path changes *when* an observation arrives, never *what* it
+    observed.  Synchronous callers wanting slot order should keep using
+    `pull_many`; this helper exists for callers that care about the
+    completion timeline (`Completion.finished_at`)."""
+    disp = open_dispatcher(env, n_workers=n_workers)
+    for i, knobs in enumerate(knobs_list):
+        disp.submit(knobs, round_index + i)
+    out = []
+    while disp.in_flight:
+        out.extend(disp.pop_wave())
+    return out
 
 
 # ---------------------------------------------------------------------------

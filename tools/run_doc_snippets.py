@@ -1,0 +1,75 @@
+"""Execute the fenced ``bash`` blocks of a markdown file so the docs
+cannot rot: every quickstart command in README.md is run by CI exactly as
+a reader would type it (from the repo root, with `PYTHONPATH=src`).
+
+Each ```bash fenced block is executed as one script under
+``bash -euo pipefail``; a block fails the run if any of its commands
+does (a block exceeding the per-block timeout counts as failed).  Blocks
+whose first line starts with ``# docs: skip`` are reported but not
+executed (commands another CI job already runs, or that need hardware
+the CI host lacks).
+
+    python tools/run_doc_snippets.py README.md [more.md ...]
+
+Exit status is the number of failing blocks.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import time
+
+FENCE = re.compile(r"^```bash\s*$(.*?)^```\s*$", re.M | re.S)
+TIMEOUT_S = 600
+
+
+def bash_blocks(path: pathlib.Path) -> list[str]:
+    return [m.group(1).strip() for m in FENCE.finditer(path.read_text())]
+
+
+def run_block(block: str, cwd: pathlib.Path) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{cwd / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run(["bash", "-euo", "pipefail", "-c", block],
+                              cwd=cwd, env=env, timeout=TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        print(f"-- timed out after {TIMEOUT_S}s")
+        return 124
+    return proc.returncode
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: run_doc_snippets.py <markdown file> ...")
+        return 2
+    root = pathlib.Path(__file__).resolve().parent.parent
+    failures = 0
+    for name in argv:
+        path = (root / name).resolve()
+        blocks = bash_blocks(path)
+        print(f"== {name}: {len(blocks)} bash block(s)")
+        for i, block in enumerate(blocks, 1):
+            head = block.splitlines()[0] if block else "<empty>"
+            if head.strip().startswith("# docs: skip"):
+                print(f"-- block {i}: SKIPPED ({head})")
+                continue
+            print(f"-- block {i}: {head}")
+            t0 = time.perf_counter()
+            rc = run_block(block, root)
+            dt = time.perf_counter() - t0
+            status = "ok" if rc == 0 else f"FAILED (exit {rc})"
+            print(f"-- block {i}: {status} in {dt:.1f}s")
+            failures += rc != 0
+    if failures:
+        print(f"{failures} block(s) failed")
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
