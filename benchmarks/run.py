@@ -9,7 +9,11 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
     E6 tpu_serving    DESIGN SS3  v5e adaptation landscapes + search
     E7 roofline       EXPERIMENTS SSRoofline  dry-run derived terms
     E8 kernels        kernel-vs-oracle checks + reference timings
-    E10 fleet_scaling beyond-paper  batched-TS rounds/wall-clock vs K
+    E10 fleet_scaling beyond-paper  batched-TS rounds/wall-clock vs K,
+                      straggler tolerance (sync barrier vs async queue)
+    E11 heterogeneity beyond-paper  shared vs device-contextual posterior
+                      under persistent per-device speed offsets (same
+                      module: benchmarks.fleet_scaling)
 """
 
 from __future__ import annotations
@@ -32,7 +36,7 @@ def main() -> None:
         ("E7_roofline", roofline),
         ("E8_kernels", kernels),
         ("E9_ablations", ablations),
-        ("E10_fleet_scaling", fleet_scaling),
+        ("E10_E11_fleet_scaling", fleet_scaling),
     ]
     only = set(sys.argv[1:])
     print("name,us_per_call,derived")

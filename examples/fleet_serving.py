@@ -20,8 +20,17 @@ straggler (--straggler S slows one device's *completions* S x without
 changing its telemetry) — its simulated wall-clock barely moves while the
 synchronous barrier would inherit the straggler every round.
 
+Every run serves exactly --rounds pulls (the final batched round is
+truncated to the remaining budget), so the three rows are pull-for-pull
+comparable.  `--policy contextual` swaps in the device-contextual sampler
+(per-device additive cost offsets learned from each observation's
+`metadata["device"]`) — worth it when --jitter is large, where persistent
+device offsets bias the shared posterior's commit.
+
     PYTHONPATH=src python examples/fleet_serving.py [--model qwen2.5-3b]
     PYTHONPATH=src python examples/fleet_serving.py --straggler 4
+    PYTHONPATH=src python examples/fleet_serving.py --jitter 0.2 \
+        --policy contextual
 """
 
 import argparse
@@ -32,14 +41,19 @@ from repro.core import controller, cost, priors
 from repro.platform import barrier_walltimes, make_env, make_space
 
 
-def _setup(name: str, model: str, alpha: float, seed: int, **env_kw):
+def _setup(name: str, model: str, alpha: float, seed: int,
+           policy_name: str = "camel", n_devices: int = 1, **env_kw):
     env = make_env(name, noise=0.0, seed=seed, **env_kw)
     space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e_ref, l_ref = env.expected(space.values(space.corner()))
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
-    policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
+    if policy_name == "contextual":
+        policy, _, _ = priors.jetson_contextual_policy(model, space,
+                                                       n_devices, alpha)
+    else:
+        policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
     return env, space, cm, opt_arm, opt_cost, policy
 
 
@@ -57,43 +71,51 @@ def main() -> None:
     ap.add_argument("--straggler", type=float, default=1.0,
                     help="device 0 returns results this many times slower "
                          "on the async path (1.0 = homogeneous)")
+    ap.add_argument("--policy", default="camel",
+                    choices=["camel", "contextual"],
+                    help="'contextual' learns per-device cost offsets "
+                         "(device-contextual Thompson sampling)")
     args = ap.parse_args()
 
     fleet_name = f"fleet/{args.devices}xjetson/{args.model}/landscape"
     env_kw = dict(speed_jitter=args.jitter, power_jitter=args.jitter,
                   dispatch_factors=(args.straggler,)
                   + (1.0,) * (args.devices - 1))
+    pol_kw = dict(policy_name=args.policy, n_devices=args.devices)
 
     # Sequential baseline: Algorithm 1, one pull per round.
     env, space, cm, opt_arm, opt_cost, policy = _setup(
-        fleet_name, args.model, 0.5, args.seed, **env_kw)
+        fleet_name, args.model, 0.5, args.seed, **pol_kw, **env_kw)
     ctrl = controller.Controller(space, policy, cm, optimal_cost=opt_cost,
                                  seed=args.seed)
     t0 = time.perf_counter()
     seq = ctrl.run(env, args.rounds)
     seq_s = time.perf_counter() - t0
 
-    # Batched: K concurrent arms per synchronous-barrier round.
+    # Batched: K concurrent arms per synchronous-barrier round, exactly
+    # --rounds pulls (the final round truncates to the remaining budget).
     fenv, space, cm, opt_arm, opt_cost, policy = _setup(
-        fleet_name, args.model, 0.5, args.seed, **env_kw)
+        fleet_name, args.model, 0.5, args.seed, **pol_kw, **env_kw)
     n_rounds = max(1, math.ceil(args.rounds / args.k))
     bctrl = controller.BatchController(space, policy, cm,
                                        optimal_cost=opt_cost,
                                        seed=args.seed, k=args.k)
     t0 = time.perf_counter()
-    bat = bctrl.run(fenv, n_rounds)
+    bat = bctrl.run(fenv, n_rounds, pull_budget=args.rounds)
     bat_s = time.perf_counter() - t0
-    bat_sim = float(barrier_walltimes(fenv, bat.n_rounds, args.k)[-1])
+    bat_sim = float(barrier_walltimes(fenv, bat.n_rounds, args.k,
+                                      pull_budget=args.rounds)[-1])
 
-    # Async: fleet-size arms in flight, completion-ordered updates.
+    # Async: fleet-size arms in flight, completion-ordered updates, the
+    # same exact pull budget.
     aenv, space, cm, opt_arm, opt_cost, policy = _setup(
-        fleet_name, args.model, 0.5, args.seed, **env_kw)
+        fleet_name, args.model, 0.5, args.seed, **pol_kw, **env_kw)
     a_rounds = max(1, math.ceil(args.rounds / args.devices))
     actrl = controller.AsyncController(space, policy, cm,
                                        optimal_cost=opt_cost,
                                        seed=args.seed, k=args.devices)
     t0 = time.perf_counter()
-    asy = actrl.run(aenv, a_rounds)
+    asy = actrl.run(aenv, a_rounds, pull_budget=args.rounds)
     asy_s = time.perf_counter() - t0
     asy_sim = float(asy.records[-1].obs.metadata["finished_at"])
     staleness = [r.obs.metadata["staleness"] for r in asy.records]

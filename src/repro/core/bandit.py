@@ -457,3 +457,291 @@ def windowed_select(state: WindowedTSState, key: Array,
 def windowed_select_many(state: WindowedTSState, key: Array, k: int,
                          active_mask: Optional[Array] = None) -> Array:
     return select_arms(state.base, key, k, active_mask)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: device-contextual TS for heterogeneous fleets
+# ---------------------------------------------------------------------------
+#
+# A fleet device carries *persistent* speed/power offsets (the
+# device-to-device energy variance of arXiv:2511.11624, modeled in
+# platform/fleet.py), so the observed cost of arm a served by device d
+# decomposes as
+#
+#     cost = theta_a + delta_d + noise
+#
+# with a shared per-arm effect theta_a (what the controller optimizes: the
+# FLEET-level cost of the configuration) and a per-device additive offset
+# delta_d.  A shared posterior that ignores d estimates theta_a as the mean
+# over *whichever devices happened to serve a* — under heterogeneity it can
+# commit to a device artifact instead of the fleet-optimal arm.
+#
+# `ContextualTSState` is the hierarchical-Gaussian treatment of that
+# decomposition with flat pytree leaves — (n_arms,) vectors for the shared
+# effect, (n_devices,) vectors for the offsets — so select/update/
+# update_batch/update_stale stay jit/vmap-clean:
+#
+# * the shared posterior is a plain `TSState` over *device-corrected* costs
+#   (each observation enters as ``cost - dev_offset[d]`` with the offsets
+#   frozen at update time);
+# * offsets are the posterior means of delta_d ~ N(0, sigma_dev^2) given
+#   the per-device residuals ``cost - arm_mean[a]``:
+#
+#       delta_hat_d = resid_sum_d / (resid_count_d + OFFSET_LAMBDA)
+#
+#   i.e. empirical-Bayes shrinkage toward 0 with OFFSET_LAMBDA prior
+#   pseudo-observations.  The prior is *device-count-scaled* (lambda =
+#   `offset_prior` x n_devices): a larger fleet gets a tighter prior per
+#   device, so the total offset mass the model can absorb stays bounded
+#   and no single device can explain away a genuinely good arm;
+# * offsets are centered (mean subtracted) for identifiability — the fleet
+#   mean belongs to theta, not to the offsets.  Centering is also what
+#   makes the homogeneous case *exact*: with n_devices = 1 the centered
+#   offset is identically 0.0, every corrected cost equals the raw cost
+#   bit-for-bit, and the whole state reduces to today's `CamelTS`.
+#
+# Residual bookkeeping is deliberately exact in the degenerate case: the
+# residual anchor `arm_mean` is a Welford running mean of corrected costs
+# (``m += (c - m)/n``), so a stream of identical observations keeps
+# ``c - m == 0.0`` exactly and zero-jitter fleets provably never grow
+# offsets — which is what lets the E11 benchmark assert bit-identical
+# records between the shared and contextual policies at jitter 0.  A
+# first pull of an arm carries no cross-device information (its residual
+# is definitionally 0), so it never touches the device statistics.
+
+#: Prior pseudo-observations per device *per device in the fleet*: the
+#: offset shrinkage denominator is ``resid_count_d + OFFSET_PRIOR *
+#: n_devices`` (see block comment above).
+OFFSET_PRIOR = 1.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ContextualTSState:
+    """Hierarchical posterior: shared per-arm effects + per-device offsets.
+
+    Leaves are (n_arms,) or (n_devices,) vectors plus one scalar — no
+    (arms x devices) matrix — so the state jits/vmaps exactly like
+    `TSState`.
+    """
+
+    base: TSState        # shared-effect posterior over CORRECTED costs
+    arm_mean: Array      # f32[n_arms] Welford mean of corrected costs
+    dev_resid_sum: Array    # f32[n_devices] sum of raw-cost residuals
+    dev_resid_count: Array  # f32[n_devices] residuals observed per device
+    dev_offset: Array       # f32[n_devices] centered shrunk offsets
+    offset_lambda: Array    # f32 scalar: prior pseudo-counts (count-scaled)
+
+    @property
+    def n_arms(self) -> int:
+        return self.base.n_arms
+
+    @property
+    def n_devices(self) -> int:
+        return self.dev_offset.shape[0]
+
+    @property
+    def count(self) -> Array:
+        """Per-arm observation counts (commit tie-breaking reads these)."""
+        return self.base.count
+
+    def mean_cost(self) -> Array:
+        """Empirical mean of device-corrected costs per arm — the fleet-
+        level estimate the controller commits on."""
+        return self.base.mean_cost()
+
+
+def init_contextual(n_arms: int, n_devices: int,
+                    prior_mu: float | Array = 1.0,
+                    prior_sigma: float | Array = 1.0,
+                    offset_prior: float = OFFSET_PRIOR) -> ContextualTSState:
+    if n_devices < 1:
+        raise ValueError(f"need >= 1 device, got {n_devices}")
+    if not offset_prior > 0.0:
+        # lambda = 0 makes never-observed devices' offsets 0/0 = NaN,
+        # which would silently poison every corrected cost downstream.
+        raise ValueError(f"offset_prior must be > 0, got {offset_prior}")
+    zeros = jnp.zeros((n_devices,), jnp.float32)
+    return ContextualTSState(
+        base=init_state(n_arms, prior_mu, prior_sigma),
+        arm_mean=jnp.zeros((n_arms,), jnp.float32),
+        dev_resid_sum=zeros,
+        dev_resid_count=zeros,
+        dev_offset=zeros,
+        offset_lambda=jnp.asarray(float(offset_prior) * n_devices,
+                                  jnp.float32))
+
+
+def _centered_offsets(resid_sum: Array, resid_count: Array,
+                      offset_lambda: Array) -> Array:
+    """Shrunk posterior offset means, centered for identifiability.  With
+    one device ``raw - mean(raw)`` is exactly 0.0 — the homogeneous
+    reduction."""
+    raw = resid_sum / (resid_count + offset_lambda)
+    return raw - jnp.mean(raw)
+
+
+def contextual_update_stale(state: ContextualTSState, arm: Array,
+                            cost: Array, device: Array,
+                            staleness: Array) -> ContextualTSState:
+    """Device-aware UPDATE (staleness-capable): correct the cost by the
+    device's current offset, feed the shared posterior through
+    `update_stale`, then refresh the offset estimates from the raw-cost
+    residual.  ``device < 0`` is the shared path: no correction, no
+    offset learning — bit-identical to `update_stale` on `state.base`.
+    """
+    cost = jnp.asarray(cost, jnp.float32)
+    d = jnp.asarray(device, jnp.int32)
+    n_dev = state.dev_offset.shape[0]
+    # Out-of-range ids (either sign) take the shared path — same rule as
+    # the batch form, so the two update paths never disagree.
+    valid = (d >= 0) & (d < n_dev)
+    off = jnp.where(valid, state.dev_offset[jnp.clip(d, 0, n_dev - 1)], 0.0)
+    corrected = cost - off
+    base = update_stale(state.base, arm, corrected, staleness)
+
+    arm = jnp.asarray(arm)
+    onehot = jnp.arange(state.n_arms) == arm
+    n_new = base.count[arm]
+    m_prev = state.arm_mean[arm]
+    # Welford step; the first observation seeds the mean exactly (m_prev +
+    # (c - m_prev) is NOT c bit-for-bit in floats, so branch on n == 1).
+    m_new = jnp.where(n_new == 1, corrected,
+                      m_prev + (corrected - m_prev)
+                      / n_new.astype(jnp.float32))
+    arm_mean = jnp.where(onehot, m_new, state.arm_mean)
+
+    # A first pull carries no cross-device information: the residual
+    # anchor IS that observation.  Only arms with history inform offsets.
+    # ``cost - m_new`` is attenuated by (n-1)/n because the anchor mean
+    # includes the observation itself; the n/(n-1) factor undoes that, so
+    # the residual is an unbiased read of delta_d (minus the mean offset
+    # of the arm's other servers, which centering absorbs).  Exact zeros
+    # stay exact zeros, so the homogeneous reduction is unaffected.
+    informative = valid & (n_new >= 2)
+    nf = n_new.astype(jnp.float32)
+    deatten = nf / jnp.maximum(nf - 1.0, 1.0)
+    resid = jnp.where(informative, (cost - m_new) * deatten, 0.0)
+    dev_onehot = (jnp.arange(n_dev) == d) & informative
+    resid_sum = state.dev_resid_sum + jnp.where(dev_onehot, resid, 0.0)
+    resid_count = state.dev_resid_count + dev_onehot.astype(jnp.float32)
+    return dataclasses.replace(
+        state, base=base, arm_mean=arm_mean, dev_resid_sum=resid_sum,
+        dev_resid_count=resid_count,
+        dev_offset=_centered_offsets(resid_sum, resid_count,
+                                     state.offset_lambda))
+
+
+def contextual_update(state: ContextualTSState, arm: Array, cost: Array,
+                      device: Array) -> ContextualTSState:
+    """Fresh device-aware UPDATE (`contextual_update_stale` at 0)."""
+    return contextual_update_stale(state, arm, cost, device, 0.0)
+
+
+def contextual_update_batch(state: ContextualTSState, arms: Array,
+                            costs: Array,
+                            devices: Optional[Array] = None,
+                            ) -> ContextualTSState:
+    """Delayed batched device-aware UPDATE: all K costs are corrected with
+    the round's *frozen* offsets (the delayed-feedback discipline — the
+    arms were selected from a frozen posterior, so they are corrected by
+    the matching frozen offsets), the shared posterior takes one
+    `update_batch`, and the offsets refresh once from the K residuals.
+    For distinct arms this is bit-identical to K chained
+    `contextual_update` calls *of the shared posterior path*; the offset
+    refresh is once-per-round by construction.  ``devices=None`` (or any
+    entry < 0) is the shared path for those slots.
+    """
+    arms = jnp.asarray(arms, jnp.int32).reshape(-1)
+    costs = jnp.asarray(costs, jnp.float32).reshape(-1)
+    if devices is None:
+        devices = jnp.full(arms.shape, -1, jnp.int32)
+    devices = jnp.asarray(devices, jnp.int32).reshape(-1)
+    n, n_dev = state.n_arms, state.dev_offset.shape[0]
+
+    # Out-of-range ids (either sign) take the shared path, never an
+    # aliased device — matching contextual_update_stale.
+    valid = (devices >= 0) & (devices < n_dev)
+    didx = jnp.clip(devices, 0, n_dev - 1)
+    offs = jnp.where(valid, state.dev_offset[didx], 0.0)
+    corrected = costs - offs
+    base = update_batch(state.base, arms, corrected)
+
+    d_cnt = jax.ops.segment_sum(jnp.ones_like(arms), arms, num_segments=n)
+    seg_sum = jax.ops.segment_sum(corrected, arms, num_segments=n)
+    seg_mean = seg_sum / jnp.maximum(d_cnt, 1).astype(jnp.float32)
+    n_new = base.count
+    first = (state.base.count == 0) & (d_cnt == 1)
+    # ``(delta * d_cnt) / n_new`` so the d_cnt == 1 case reproduces the
+    # scalar Welford step bit-for-bit (duplicate arms — only possible via
+    # generic with-replacement fallbacks — use their segment mean).
+    welford = state.arm_mean + (seg_mean - state.arm_mean) \
+        * d_cnt.astype(jnp.float32) / jnp.maximum(n_new, 1).astype(jnp.float32)
+    arm_mean = jnp.where(d_cnt > 0, jnp.where(first, seg_sum, welford),
+                         state.arm_mean)
+
+    informative = valid & (n_new[arms] >= 2)
+    nf = n_new[arms].astype(jnp.float32)
+    deatten = nf / jnp.maximum(nf - 1.0, 1.0)  # see contextual_update_stale
+    resid = jnp.where(informative, (costs - arm_mean[arms]) * deatten, 0.0)
+    resid_sum = state.dev_resid_sum + jax.ops.segment_sum(
+        resid, didx, num_segments=n_dev)
+    resid_count = state.dev_resid_count + jax.ops.segment_sum(
+        informative.astype(jnp.float32), didx, num_segments=n_dev)
+    return dataclasses.replace(
+        state, base=base, arm_mean=arm_mean, dev_resid_sum=resid_sum,
+        dev_resid_count=resid_count,
+        dev_offset=_centered_offsets(resid_sum, resid_count,
+                                     state.offset_lambda))
+
+
+class ContextualTS:
+    """Device-contextual Camel: shared per-arm effect + shrunk per-device
+    additive offsets (see the section comment above).  Selection and
+    commit read only the shared posterior — the controller optimizes the
+    fleet-level arm; offsets are nuisance parameters that stop persistent
+    device heterogeneity from biasing it.
+
+    The controller passes each observation's serving device through the
+    widened update signatures (``device=`` / ``devices=``; fleets stamp
+    it in ``obs.metadata["device"]``).  ``None`` / ``-1`` falls back to
+    the shared path, and with ``n_devices=1`` (or offsets that never
+    leave 0) every code path is bit-identical to `CamelTS`.
+    """
+
+    def __init__(self, n_devices: int, prior_mu=1.0, prior_sigma=1.0,
+                 offset_prior: float = OFFSET_PRIOR):
+        self.n_devices = int(n_devices)
+        self.prior_mu = prior_mu
+        self.prior_sigma = prior_sigma
+        self.offset_prior = float(offset_prior)
+
+    def init(self, n_arms: int) -> ContextualTSState:
+        return init_contextual(n_arms, self.n_devices, self.prior_mu,
+                               self.prior_sigma, self.offset_prior)
+
+    def select(self, state: ContextualTSState, key: Array, t: Array
+               ) -> Array:
+        del t
+        return select_arm(state.base, key).astype(jnp.int32)
+
+    def select_many(self, state: ContextualTSState, key: Array, t: Array,
+                    k: int) -> Array:
+        del t
+        return select_arms(state.base, key, k)
+
+    def update(self, state: ContextualTSState, arm: Array, cost: Array,
+               device=None) -> ContextualTSState:
+        return contextual_update(state, arm, cost,
+                                 -1 if device is None else device)
+
+    def update_batch(self, state: ContextualTSState, arms: Array,
+                     costs: Array, devices=None) -> ContextualTSState:
+        return contextual_update_batch(state, arms, costs, devices)
+
+    def update_stale(self, state: ContextualTSState, arm: Array,
+                     cost: Array, staleness: float, device=None
+                     ) -> ContextualTSState:
+        return contextual_update_stale(state, arm, cost,
+                                       -1 if device is None else device,
+                                       staleness)

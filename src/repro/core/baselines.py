@@ -28,7 +28,17 @@ class Policy(Protocol):
     `update_stale(state, arm, cost, staleness) -> state`, which the
     AsyncController calls per completion with the number of posterior
     refreshes that happened since the arm was selected (policies without
-    it get the plain `update`, i.e. staleness is ignored)."""
+    it get the plain `update`, i.e. staleness is ignored).
+
+    Device context (heterogeneous fleets): a policy that wants to know
+    which device served each observation widens its update signatures
+    with keyword-only context — `update(..., device=None)`,
+    `update_batch(..., devices=None)`, `update_stale(..., device=None)`.
+    The controllers detect the widened signature and pass the device id
+    from `obs.metadata["device"]` (None / -1 where the environment has no
+    device notion); policies without the keyword keep working untouched —
+    the shared-posterior path is the default.  `bandit.ContextualTS` is
+    the reference implementation."""
 
     def init(self, n_arms: int): ...
     def select(self, state, key: Array, t: Array) -> Array: ...
@@ -271,6 +281,8 @@ class CamelWindowedTS:
 
 POLICIES = {
     "camel": CamelTS,
+    # device-contextual Camel (requires n_devices=; see bandit.ContextualTS)
+    "contextual": bandit.ContextualTS,
     "camel_windowed": CamelWindowedTS,
     "grid": GridSearch,
     "ucb1": UCB1,

@@ -36,7 +36,8 @@ Observation-delay and staleness semantics across the three loops
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+import inspect
+from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,31 @@ class Environment(Protocol):
 
     def pull(self, knobs: Dict[str, object], round_index: int
              ) -> Observation: ...
+
+
+def _accepts_kw(fn, name: str) -> bool:
+    """True when `fn` can take keyword `name` (device-context widening —
+    see baselines.Policy): an explicit parameter or **kwargs."""
+    if fn is None:
+        return False
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables
+        return False
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
+def _argmin_most_pulled(mean, counts) -> int:
+    """The commit rule: argmin of mean cost, exact ties broken toward the
+    most-pulled arm (the better-estimated one), then the lowest index.
+    The ONE implementation — `BatchController._commit` and
+    `_per_record_commit_history` both call it, so the live commit and its
+    reconstruction cannot disagree on tie-breaking."""
+    mean = np.asarray(mean, dtype=float)
+    counts = np.asarray(counts)
+    best = mean == mean.min()
+    return int(np.argmax(np.where(best, counts, -1)))
 
 
 @dataclasses.dataclass
@@ -137,25 +163,49 @@ class BatchController:
         self.optimal_cost = optimal_cost
         self.key = jax.random.PRNGKey(seed)
         self.k = int(k)
+        # Device-context widening (see baselines.Policy): pass the serving
+        # device through to policies whose update signatures take it.
+        self._batch_wants_devices = _accepts_kw(
+            getattr(policy, "update_batch", None), "devices")
+        self._update_wants_device = _accepts_kw(
+            getattr(policy, "update", None), "device")
+        self._stale_wants_device = _accepts_kw(
+            getattr(policy, "update_stale", None), "device")
 
-    def run(self, env: Environment, n_rounds: int) -> ControllerResult:
+    def run(self, env: Environment, n_rounds: int,
+            pull_budget: Optional[int] = None) -> ControllerResult:
+        """T batched rounds of width K.  `pull_budget` (default
+        ``n_rounds * k``) caps the total pulls exactly: the final round is
+        truncated to the remaining budget, so a 49-pull budget served at
+        K=8 runs 6 full rounds plus one single-slot round — never 56
+        pulls — matching `AsyncController`'s exact-budget semantics."""
         from repro.platform.registry import pull_many  # lazy: import cycle
 
+        budget = n_rounds * self.k if pull_budget is None else int(
+            pull_budget)
+        if pull_budget is not None and \
+                not 1 <= budget <= n_rounds * self.k:
+            raise ValueError(
+                f"pull_budget must be in [1, {n_rounds * self.k}] "
+                f"(n_rounds * k), got {pull_budget}")
         state = self.policy.init(self.space.n_arms)
         regret = RegretTracker(self.optimal_cost
                                if self.optimal_cost is not None else 0.0)
         records: List[RoundRecord] = []
 
         t = 0
-        for rnd in range(n_rounds):
+        rnd = 0
+        while t < budget:
+            width = min(self.k, budget - t)
             self.key, sub = jax.random.split(self.key)
-            arms = self._select_round(state, sub, t)
+            arms = self._select_group(state, sub, t, width)
             knobs_list = [self.space.values(a) for a in arms]
             obs_list = [Observation.of(o)
                         for o in pull_many(env, knobs_list, round_index=t)]
             costs = [float(self.cost_model.cost(o.energy, o.latency))
                      for o in obs_list]
-            state = self._update_round(state, arms, costs)
+            devices = [o.metadata.get("device") for o in obs_list]
+            state = self._update_round(state, arms, costs, devices)
             for slot, (arm, knobs, obs, c) in enumerate(
                     zip(arms, knobs_list, obs_list, costs)):
                 r = regret.record(c) if self.optimal_cost is not None else 0.0
@@ -164,14 +214,12 @@ class BatchController:
                     latency=obs.latency, cost=c, regret=float(r), obs=obs,
                     round=rnd, slot=slot))
                 t += 1
+            rnd += 1
 
         best_arm = self._commit(state, records)
         return ControllerResult(
             records=records, final_state=state, best_arm=best_arm,
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
-
-    def _select_round(self, state, key, t: int) -> List[int]:
-        return self._select_group(state, key, t, self.k)
 
     def _select_group(self, state, key, t: int, width: int) -> List[int]:
         """Select `width` arms from the frozen posterior with one round
@@ -193,30 +241,57 @@ class BatchController:
                                        jnp.asarray(t + 1 + i)))
                 for i in range(width)]
 
-    def _update_round(self, state, arms: List[int], costs: List[float]):
+    def _update_round(self, state, arms: List[int], costs: List[float],
+                      devices: Optional[Sequence] = None):
+        """Apply one round's delayed feedback.  `devices` carries each
+        slot's serving device (from `obs.metadata["device"]`, None for
+        deviceless environments); it reaches the policy only when its
+        update signature asks for it (device-context widening)."""
         fn = getattr(self.policy, "update_batch", None)
         if fn is not None:
-            return fn(state, jnp.asarray(arms, jnp.int32),
-                      jnp.asarray(costs, jnp.float32))
-        for a, c in zip(arms, costs):
-            state = self.policy.update(state, jnp.asarray(a),
-                                       jnp.asarray(c, jnp.float32))
+            args = (state, jnp.asarray(arms, jnp.int32),
+                    jnp.asarray(costs, jnp.float32))
+            if self._batch_wants_devices:
+                dev = [-1 if d is None else int(d)
+                       for d in (devices if devices is not None
+                                 else [None] * len(arms))]
+                return fn(*args, devices=jnp.asarray(dev, jnp.int32))
+            return fn(*args)
+        for i, (a, c) in enumerate(zip(arms, costs)):
+            if self._update_wants_device:
+                d = devices[i] if devices is not None else None
+                state = self.policy.update(
+                    state, jnp.asarray(a), jnp.asarray(c, jnp.float32),
+                    device=-1 if d is None else int(d))
+            else:
+                state = self.policy.update(state, jnp.asarray(a),
+                                           jnp.asarray(c, jnp.float32))
         return state
 
     def _commit(self, state, records) -> int:
-        """The deployed configuration after search: the arm with the lowest
-        posterior/empirical mean cost (ties broken toward most-pulled)."""
-        mean = getattr(state, "mean_cost", None)
-        if callable(mean):
-            return int(jnp.argmin(mean()))
-        base = getattr(state, "base", None)
-        if base is not None and hasattr(base, "mean_cost"):
-            return int(jnp.argmin(base.mean_cost()))
-        # Grid/UCB-style states expose count & sum_x.
-        counts = np.asarray(state.count)
-        sums = np.asarray(state.sum_x)
-        m = np.where(counts > 0, sums / np.maximum(counts, 1), np.inf)
-        return int(np.argmin(m))
+        return commit_arm(state)
+
+
+def commit_arm(state) -> int:
+    """The commit rule applied to any policy state — the deployed
+    configuration after search: the arm with the lowest
+    posterior/empirical mean cost, exact ties broken toward the
+    most-pulled arm, then the lowest index (`_argmin_most_pulled`, shared
+    with the reconstruction in `_per_record_commit_history` so live and
+    reconstructed commits cannot disagree).  Module-level so benchmarks
+    can replay a policy's commit trajectory from recorded rounds (the E11
+    heterogeneity sweep)."""
+    mean = getattr(state, "mean_cost", None)
+    if callable(mean):
+        return _argmin_most_pulled(mean(), state.count)
+    base = getattr(state, "base", None)
+    if base is not None and hasattr(base, "mean_cost"):
+        return _argmin_most_pulled(base.mean_cost(), base.count)
+    # Grid/UCB-style states expose count & sum_x.
+    counts = np.asarray(state.count)
+    sums = np.asarray(state.sum_x)
+    m = np.where(counts > 0, sums / np.maximum(counts, 1), np.inf)
+    return _argmin_most_pulled(m, counts)
 
 
 class Controller(BatchController):
@@ -255,17 +330,25 @@ class AsyncController(BatchController):
     dispatcher's rotation tie-break, same update arithmetic), which the
     tests assert record-for-record.
 
-    `run(env, n_rounds)` keeps the usual budget semantics: n_rounds
-    rounds of width K = ``n_rounds * k`` total pulls.  Each record's
-    `round`/`slot` are its completion wave and position within it, and
-    its `obs.metadata` gains `submitted_at` / `finished_at` (the
-    dispatcher's simulated clock) and `staleness`.
+    `run(env, n_rounds, pull_budget=None)` keeps the usual budget
+    semantics: ``n_rounds * k`` total pulls, or exactly `pull_budget`
+    when given (the loop is completion-counted, so any budget is exact).
+    Each record's `round`/`slot` are its completion wave and position
+    within it, and its `obs.metadata` gains `submitted_at` /
+    `finished_at` (the dispatcher's simulated clock) and `staleness`.
     """
 
-    def run(self, env: Environment, n_rounds: int) -> ControllerResult:
+    def run(self, env: Environment, n_rounds: int,
+            pull_budget: Optional[int] = None) -> ControllerResult:
         from repro.platform.registry import open_dispatcher  # lazy: cycle
 
-        budget = n_rounds * self.k
+        budget = n_rounds * self.k if pull_budget is None else int(
+            pull_budget)
+        if pull_budget is not None and \
+                not 1 <= budget <= n_rounds * self.k:
+            raise ValueError(
+                f"pull_budget must be in [1, {n_rounds * self.k}] "
+                f"(n_rounds * k), got {pull_budget}")
         disp = open_dispatcher(env)
         state = self.policy.init(self.space.n_arms)
         regret = RegretTracker(self.optimal_cost
@@ -291,7 +374,8 @@ class AsyncController(BatchController):
                 obs = comp.obs
                 c = float(self.cost_model.cost(obs.energy, obs.latency))
                 staleness = events - epoch
-                state = self._update_stale(state, arm, c, staleness)
+                state = self._update_stale(state, arm, c, staleness,
+                                           obs.metadata.get("device"))
                 r = regret.record(c) if self.optimal_cost is not None else 0.0
                 records.append(RoundRecord(
                     t=completed, arm=arm, knobs=knobs, energy=obs.energy,
@@ -310,27 +394,40 @@ class AsyncController(BatchController):
             records=records, final_state=state, best_arm=best_arm,
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
 
-    def _update_stale(self, state, arm: int, cost: float, staleness: int):
+    def _update_stale(self, state, arm: int, cost: float, staleness: int,
+                      device=None):
+        """Apply one completion.  `device` is the serving device from the
+        completion's `obs.metadata["device"]` (None for deviceless
+        environments); it reaches the policy only when its update
+        signature asks for it (device-context widening)."""
+        dev_kw = {}
+        if device is not None:
+            device = int(device)
         fn = getattr(self.policy, "update_stale", None)
         if fn is not None:
+            if self._stale_wants_device:
+                dev_kw = {"device": -1 if device is None else device}
             return fn(state, jnp.asarray(arm),
-                      jnp.asarray(cost, jnp.float32), float(staleness))
+                      jnp.asarray(cost, jnp.float32), float(staleness),
+                      **dev_kw)
         # Policies without a staleness notion (grid, UCB, ...) treat late
         # observations as fresh.
+        if self._update_wants_device:
+            dev_kw = {"device": -1 if device is None else device}
         return self.policy.update(state, jnp.asarray(arm),
-                                  jnp.asarray(cost, jnp.float32))
+                                  jnp.asarray(cost, jnp.float32), **dev_kw)
 
 
 def _per_record_commit_history(records: List[RoundRecord], prior_mu,
                                n_arms: int) -> np.ndarray:
     """The arm the controller would commit to after each individual pull,
     reconstructed with the same empirical rule as
-    `BatchController._commit` for mean-cost states (argmin of mean
-    observed cost, prior mean where unpulled).  The ONE copy of that
-    reconstruction: `committed_best_history` samples it at round
-    boundaries and `walltime_to_converge` reads it per completion, so the
-    measured quantities cannot drift from the controller's actual commit
-    behavior (or from each other)."""
+    `BatchController._commit` for mean-cost states (mean observed cost,
+    prior mean where unpulled, `_argmin_most_pulled` tie-breaking).  The
+    ONE copy of that reconstruction: `committed_best_history` samples it
+    at round boundaries and `walltime_to_converge` reads it per
+    completion, so the measured quantities cannot drift from the
+    controller's actual commit behavior (or from each other)."""
     cnt = np.zeros(n_arms)
     s = np.zeros(n_arms)
     prior = np.broadcast_to(np.asarray(prior_mu, float), (n_arms,))
@@ -339,28 +436,47 @@ def _per_record_commit_history(records: List[RoundRecord], prior_mu,
         cnt[rec.arm] += 1
         s[rec.arm] += rec.cost
         mean = np.where(cnt > 0, s / np.maximum(cnt, 1), prior)
-        hist[i] = int(np.argmin(mean))
+        hist[i] = _argmin_most_pulled(mean, cnt)
     return hist
 
 
-def committed_best_history(records: List[RoundRecord], k: int,
+def committed_best_history(records: List[RoundRecord],
                            prior_mu, n_arms: int) -> List[int]:
-    """The committed arm after each K-wide round (the per-record commit
-    history sampled at each round's last slot)."""
+    """The committed arm after each controller round: the per-record
+    commit history sampled at the LAST record of each `round` value.
+    Sampling by round boundary (not by slot position) keeps every round
+    represented when rounds are narrower than K — a truncated final
+    budget round, or an `AsyncController` completion wave under
+    stragglers, where a slot-based filter would silently drop waves."""
     hist = _per_record_commit_history(records, prior_mu, n_arms)
     return [int(hist[i]) for i, rec in enumerate(records)
-            if rec.slot == k - 1]
+            if i + 1 == len(records) or records[i + 1].round != rec.round]
 
 
-def rounds_to_converge(records: List[RoundRecord], k: int, opt_arm: int,
+def rounds_to_converge(records: List[RoundRecord], opt_arm: int,
                        prior_mu, n_arms: int) -> Optional[int]:
     """First round (1-based) after which the committed arm equals
     `opt_arm` and never leaves it; None if the run never settles there."""
-    hist = committed_best_history(records, k, prior_mu, n_arms)
+    hist = committed_best_history(records, prior_mu, n_arms)
     for i in range(len(hist)):
         if all(b == opt_arm for b in hist[i:]):
             return i + 1
     return None
+
+
+def pulls_to_converge(records: List[RoundRecord], opt_arm: int,
+                      prior_mu, n_arms: int) -> Optional[int]:
+    """Number of pulls (1-based) after which the committed arm equals
+    `opt_arm` and never leaves it — the per-pull counterpart of
+    `rounds_to_converge`, comparable across different round widths (the
+    E11 heterogeneity benchmark reports it per policy)."""
+    hist = _per_record_commit_history(records, prior_mu, n_arms)
+    settled = None
+    for i in range(len(hist) - 1, -1, -1):
+        if hist[i] != opt_arm:
+            break
+        settled = i + 1
+    return settled
 
 
 def record_clocks(records: List[RoundRecord]) -> np.ndarray:

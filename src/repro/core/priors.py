@@ -117,3 +117,18 @@ def jetson_camel_policy(model: str, space: ArmSpace, alpha: float = 0.5):
     mu0, sig0 = analytic_cost_prior(space, probe_tb, 4, alpha=alpha)
     policy = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
     return policy, mu0, sig0
+
+
+def jetson_contextual_policy(model: str, space: ArmSpace, n_devices: int,
+                             alpha: float = 0.5):
+    """Device-contextual variant of `jetson_camel_policy`: the same
+    analytic Camel prior on the shared per-arm effects, with
+    `bandit.ContextualTS` learning per-device cost offsets on top — the
+    one recipe serve.py's fleet modes, the E11 benchmark, and
+    examples/fleet_serving.py all share.  Returns (policy, mu0, sig0)."""
+    from repro.core import baselines
+
+    _, mu0, sig0 = jetson_camel_policy(model, space, alpha)
+    policy = baselines.make_policy("contextual", n_devices=n_devices,
+                                   prior_mu=mu0, prior_sigma=sig0)
+    return policy, mu0, sig0

@@ -19,7 +19,13 @@ Modes:
   --mode fleet     batched Camel over a --fleet-size device fleet behind
                    one shared arrival queue (fleet/<n>xjetson registry
                    platform), K = fleet size slots per round; --rounds is
-                   the pull budget in every mode
+                   the *exact* pull budget in every mode (the final round
+                   truncates to the remaining budget).  --policy
+                   contextual swaps in device-contextual Thompson
+                   sampling: per-device additive cost offsets learned
+                   from obs.metadata["device"], so persistent fleet
+                   heterogeneity (speed/power jitter) stops biasing the
+                   shared posterior's commit
   --mode async-fleet  the same fleet without the round barrier: K arms in
                    flight through the completion-ordered dispatcher,
                    per-completion staleness-aware posterior updates;
@@ -32,7 +38,7 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve --mode search \
         --model llama3.2-1b --rounds 49
     PYTHONPATH=src python -m repro.launch.serve --mode fleet \
-        --model llama3.2-1b --fleet-size 4 --rounds 49
+        --model llama3.2-1b --fleet-size 4 --rounds 49 --policy contextual
     PYTHONPATH=src python -m repro.launch.serve --mode async-fleet \
         --model llama3.2-1b --fleet-size 4 --rounds 49 --straggler 4
 """
@@ -53,7 +59,8 @@ from repro.serving.requests import ArrivalProcess
 def search_mode(model: str, rounds: int, alpha: float, seed: int,
                 policy_name: str = "camel", k: int = 1) -> dict:
     """`rounds` is the pull budget; with k > 1 it is served in
-    ceil(rounds / k) batched rounds of K concurrent evaluations each."""
+    ceil(rounds / k) batched rounds of K concurrent evaluations, the
+    final round truncated so exactly `rounds` pulls run."""
     name = f"jetson/{model}/landscape"
     env = make_env(name, noise=0.03, seed=seed)
     space = make_space(name)
@@ -69,7 +76,7 @@ def search_mode(model: str, rounds: int, alpha: float, seed: int,
 
     ctrl = controller.BatchController(space, policy, cm,
                                       optimal_cost=opt_cost, seed=seed, k=k)
-    res = ctrl.run(env, max(1, math.ceil(rounds / k)))
+    res = ctrl.run(env, max(1, math.ceil(rounds / k)), pull_budget=rounds)
     summary = res.summary()
     summary["optimal_knobs"] = space.values(opt_arm)
     summary["found_optimal"] = bool(res.best_arm == opt_arm)
@@ -144,13 +151,32 @@ def tpu_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
     return out
 
 
+def _fleet_policy(policy_name: str, model: str, space, alpha: float,
+                  n_devices: int):
+    """Resolve a fleet-mode policy name.  "camel" and "contextual" share
+    the analytic Camel prior; "contextual" additionally learns per-device
+    additive offsets (`bandit.ContextualTS`) from the device ids the
+    fleet stamps on every observation — prefer it whenever the fleet is
+    heterogeneous (speed/power jitter)."""
+    if policy_name == "contextual":
+        return priors.jetson_contextual_policy(model, space, n_devices,
+                                               alpha)[0]
+    if policy_name == "camel":
+        return priors.jetson_camel_policy(model, space, alpha)[0]
+    return baselines.make_policy(policy_name)
+
+
 def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
-               n_devices: int, k: int = 0) -> dict:
+               n_devices: int, k: int = 0,
+               policy_name: str = "camel") -> dict:
     """Batched Camel search over an N-device fleet: K slots per round
     (default: one per device) dispatched across the fleet's shared
     arrival queue; one delayed posterior update per round.  `rounds` is
-    the pull budget, served in ceil(rounds / k) K-wide rounds — the same
-    semantics as every other mode."""
+    the pull budget, served in ceil(rounds / k) K-wide rounds with the
+    final round truncated to the remaining budget — the same exact-budget
+    semantics as every other mode.  `--policy contextual` swaps in the
+    device-contextual sampler (per-device offsets; see
+    docs/ENVIRONMENTS.md)."""
     k = k if k > 0 else n_devices
     name = f"fleet/{n_devices}xjetson/{model}/landscape"
     env = make_env(name, noise=0.03, seed=seed)
@@ -160,29 +186,31 @@ def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
 
-    policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
+    policy = _fleet_policy(policy_name, model, space, alpha, n_devices)
     ctrl = controller.BatchController(space, policy, cm,
                                       optimal_cost=opt_cost, seed=seed, k=k)
-    res = ctrl.run(env, max(1, math.ceil(rounds / k)))
+    res = ctrl.run(env, max(1, math.ceil(rounds / k)), pull_budget=rounds)
     out = res.summary()
     out["optimal_knobs"] = space.values(opt_arm)
     out["found_optimal"] = bool(res.best_arm == opt_arm)
     out["n_devices"] = n_devices
     out["k"] = k
+    out["policy"] = policy_name
     out["n_rounds"] = res.n_rounds
     out["n_pulls"] = len(res.records)
     return out
 
 
 def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
-                     n_devices: int, k: int = 0,
-                     straggler: float = 1.0) -> dict:
+                     n_devices: int, k: int = 0, straggler: float = 1.0,
+                     policy_name: str = "camel") -> dict:
     """Asynchronous Camel search over an N-device fleet: K arms in flight
     through the completion-ordered dispatcher (default K = fleet size),
     per-completion staleness-aware posterior updates instead of a round
     barrier.  `straggler` slows device 0's *completions* by that factor
-    without changing its telemetry; `rounds` is the pull budget, as in
-    every other mode."""
+    without changing its telemetry; `rounds` is the exact pull budget, as
+    in every other mode; `--policy contextual` applies each completion's
+    device context through the widened `update_stale(..., device=)`."""
     k = k if k > 0 else n_devices
     name = f"fleet/{n_devices}xjetson/{model}/landscape"
     dispatch = (straggler,) + (1.0,) * (n_devices - 1)
@@ -194,16 +222,18 @@ def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     cm = cm.with_reference(e_ref, l_ref)
     opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
 
-    policy, _, _ = priors.jetson_camel_policy(model, space, alpha)
+    policy = _fleet_policy(policy_name, model, space, alpha, n_devices)
     ctrl = controller.AsyncController(space, policy, cm,
                                       optimal_cost=opt_cost, seed=seed, k=k)
-    res = ctrl.run(make_env(name, **env_kw), max(1, math.ceil(rounds / k)))
+    res = ctrl.run(make_env(name, **env_kw), max(1, math.ceil(rounds / k)),
+                   pull_budget=rounds)
     out = res.summary()
     staleness = [r.obs.metadata["staleness"] for r in res.records]
     out["optimal_knobs"] = space.values(opt_arm)
     out["found_optimal"] = bool(res.best_arm == opt_arm)
     out["n_devices"] = n_devices
     out["k"] = k
+    out["policy"] = policy_name
     out["straggler"] = straggler
     out["n_waves"] = res.n_rounds
     out["n_pulls"] = len(res.records)
@@ -230,15 +260,25 @@ def main() -> None:
                          "Thompson sampling); 0 = auto (1, or the fleet "
                          "size in fleet mode)")
     ap.add_argument("--fleet-size", type=int, default=4)
+    ap.add_argument("--policy", default="camel",
+                    choices=sorted(baselines.POLICIES),
+                    help="search policy; 'contextual' (fleet modes only) "
+                         "learns per-device cost offsets so heterogeneous "
+                         "fleets commit on the fleet-level optimum")
     ap.add_argument("--straggler", type=float, default=1.0,
                     help="async-fleet: device 0 returns results this many "
                          "times slower (telemetry unchanged; 1.0 = "
                          "homogeneous)")
     args = ap.parse_args()
 
+    if args.policy == "contextual" and args.mode not in ("fleet",
+                                                         "async-fleet"):
+        ap.error("--policy contextual needs device context; use "
+                 "--mode fleet or --mode async-fleet")
+
     if args.mode == "search":
         out = search_mode(args.model, args.rounds, args.alpha, args.seed,
-                          k=max(1, args.k))
+                          policy_name=args.policy, k=max(1, args.k))
     elif args.mode == "validate":
         out = validate_mode(args.model, args.requests, args.alpha,
                             args.seed)
@@ -246,11 +286,13 @@ def main() -> None:
         out = engine_mode(args.arch, args.rounds, args.alpha, args.seed)
     elif args.mode == "fleet":
         out = fleet_mode(args.model, args.rounds, args.alpha, args.seed,
-                         args.fleet_size, k=args.k)
+                         args.fleet_size, k=args.k,
+                         policy_name=args.policy)
     elif args.mode == "async-fleet":
         out = async_fleet_mode(args.model, args.rounds, args.alpha,
                                args.seed, args.fleet_size, k=args.k,
-                               straggler=args.straggler)
+                               straggler=args.straggler,
+                               policy_name=args.policy)
     else:
         out = tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
     print(json.dumps(out, indent=2, default=str))

@@ -13,7 +13,13 @@ characterized in arXiv:2511.11624) is modeled as persistent multiplicative
 offsets drawn once per device: `speed_jitter` scales a device's service
 time (and therefore its energy, E = P·t/b), `power_jitter` scales its
 power draw (energy only).  Offsets are lognormal around 1 with the given
-sigma, deterministic in the fleet seed.
+sigma, deterministic in the fleet seed.  Every observation a fleet
+produces — scalar `pull`, vectorized `pull_many`, and the asynchronous
+`pull_on` path alike — stamps its serving device in
+``metadata["device"]``; that id is the context variable the
+device-contextual sampler (`bandit.ContextualTS`, ``--policy
+contextual``) consumes to keep persistent offsets from biasing the
+shared posterior's commit.
 
 Construct by registry name — ``fleet/<n>x<platform>/<model>/<scenario>``,
 e.g. ``make_env("fleet/4xjetson/llama3.2-1b/landscape")`` — or directly
@@ -215,24 +221,36 @@ class FleetEnv(BaseEnvironment):
             for d, dev in enumerate(self.devices)])
 
 
-def barrier_walltimes(env: FleetEnv, n_rounds: int, k: int) -> np.ndarray:
+def barrier_walltimes(env: FleetEnv, n_rounds: int, k: int,
+                      pull_budget: Optional[int] = None) -> np.ndarray:
     """Cumulative simulated wall-clock at which each *synchronous* K-wide
     round's barrier releases: a round ends when its slowest device drains
-    its slots (slot i of round r goes to device ``(i + r) mod N``, each
-    occupying the device for `pull_duration(d)`).  This is the timeline
-    the async dispatcher's completion clock is compared against in the
-    straggler benchmarks — with one slow device the barrier inherits its
-    dispatch factor every round, while the async path only waits for it
-    on the slots it actually serves."""
+    its slots (slot i of a width-w round at base pull index t goes to
+    device ``(i + t // w) mod N`` — the `FleetEnv.pull_many` rule — each
+    slot occupying the device for `pull_duration(d)`).  `pull_budget`
+    mirrors the controllers' exact-budget semantics: the final round is
+    truncated to the remaining budget, so the timeline never charges
+    phantom slots.  This is the timeline the async dispatcher's
+    completion clock is compared against in the straggler benchmarks —
+    with one slow device the barrier inherits its dispatch factor every
+    round, while the async path only waits for it on the slots it
+    actually serves."""
+    budget = n_rounds * k if pull_budget is None else int(pull_budget)
     clocks = np.empty(n_rounds)
     t = 0.0
+    pulls = 0
     for r in range(n_rounds):
+        width = min(k, budget - pulls)
+        if width <= 0:
+            return clocks[:r]
+        rot = pulls // width
         busy = np.zeros(env.n_devices)
-        for i in range(k):
-            d = (i + r) % env.n_devices
+        for i in range(width):
+            d = (i + rot) % env.n_devices
             busy[d] += env.pull_duration(d)
         t += busy.max()
         clocks[r] = t
+        pulls += width
     return clocks
 
 

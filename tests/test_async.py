@@ -246,8 +246,8 @@ def test_async_equals_sync_on_equal_speed_fleet():
     assert ra.best_arm == rs.best_arm
     np.testing.assert_array_equal(ra.cum_regret, rs.cum_regret)
     assert controller.committed_best_history(
-        ra.records, 4, mu0, space.n_arms) == \
-        controller.committed_best_history(rs.records, 4, mu0, space.n_arms)
+        ra.records, mu0, space.n_arms) == \
+        controller.committed_best_history(rs.records, mu0, space.n_arms)
 
 
 def test_async_controller_generic_policy_fallback():
@@ -280,6 +280,36 @@ def test_async_straggler_observations_carry_staleness():
     assert np.all(np.diff(clocks) >= 0)
     sync_end = barrier_walltimes(env, 8, 4)[-1]
     assert clocks[-1] <= 0.5 * sync_end
+
+
+def test_committed_best_history_keeps_straggler_waves():
+    """Regression: the old `slot == k - 1` filter dropped every async
+    completion wave narrower than K — under a straggler most waves are,
+    so the committed-best history went sparse (or empty) and
+    `rounds_to_converge` lied.  Sampling at each round's last record must
+    keep every wave."""
+    env, space, cm, opt_arm, opt_cost, mu0, sig0 = _fleet_setup(
+        0, noise=0.0, dispatch_factors=(4, 1, 1, 1))
+    pol = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    ctrl = controller.AsyncController(space, pol, cm, optimal_cost=opt_cost,
+                                      seed=0, k=4)
+    res = ctrl.run(env, 8)
+    wave_sizes = [sum(1 for r in res.records if r.round == w)
+                  for w in range(res.n_rounds)]
+    # the straggler makes waves ragged: some narrower than K
+    assert any(w < 4 for w in wave_sizes)
+    hist = controller.committed_best_history(res.records, mu0, space.n_arms)
+    assert len(hist) == res.n_rounds          # one sample per wave
+    # and the old filter really would have dropped waves (the bug)
+    old = [r for r in res.records if r.slot == 4 - 1]
+    assert len(old) < res.n_rounds
+    # convergence measured on the dense history agrees with the per-pull
+    # reconstruction's settle point
+    conv = controller.rounds_to_converge(res.records, opt_arm, mu0,
+                                         space.n_arms)
+    pulls = controller.pulls_to_converge(res.records, opt_arm, mu0,
+                                         space.n_arms)
+    assert (conv is None) == (pulls is None)
 
 
 @pytest.mark.slow

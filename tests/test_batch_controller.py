@@ -231,9 +231,9 @@ def test_batched_search_4x_fewer_rounds_same_best_arm():
                                         k=8)
         r8 = c8.run(make_env(NAME, noise=0.0, seed=seed), 12)
         assert r1.best_arm == r8.best_arm == opt_arm
-        n1 = controller.rounds_to_converge(r1.records, 1, opt_arm, mu0,
+        n1 = controller.rounds_to_converge(r1.records, opt_arm, mu0,
                                            space.n_arms)
-        n8 = controller.rounds_to_converge(r8.records, 8, opt_arm, mu0,
+        n8 = controller.rounds_to_converge(r8.records, opt_arm, mu0,
                                            space.n_arms)
         assert n1 is not None and n8 is not None
         assert n1 >= 4 * n8, f"seed {seed}: k=1 {n1} rounds, k=8 {n8}"
@@ -250,3 +250,91 @@ def test_batch_controller_windowed_policy():
     res = ctrl.run(make_env(NAME, noise=0.03, seed=0), 4)
     assert len(res.records) == 16
     assert 0 <= res.best_arm < space.n_arms
+
+
+# ---------------------------------------------------------------------------
+# Pull-budget truncation (bugfix: ceil(rounds/k) full rounds overshot the
+# reported budget — 49 rounds at k=8 ran 56 pulls)
+# ---------------------------------------------------------------------------
+
+
+def test_pull_budget_truncates_final_round():
+    """Regression: `pull_budget=49` at k=8 must run exactly 49 pulls — 6
+    full rounds plus one single-slot round — not 7 x 8 = 56."""
+    import math
+
+    space, cm, _, opt_cost, mu0, sig0 = _setup(0.03)
+    ctrl = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                      optimal_cost=opt_cost, seed=0, k=8)
+    res = ctrl.run(make_env(NAME, noise=0.03, seed=0),
+                   math.ceil(49 / 8), pull_budget=49)
+    assert len(res.records) == 49
+    assert res.n_rounds == 7
+    widths = [sum(1 for r in res.records if r.round == rnd)
+              for rnd in range(7)]
+    assert widths == [8] * 6 + [1]
+    # the truncated round still lands in the sampled commit history
+    hist = controller.committed_best_history(res.records, mu0,
+                                             space.n_arms)
+    assert len(hist) == 7
+
+
+def test_pull_budget_default_keeps_full_rounds():
+    """No pull_budget -> the historical n_rounds * k semantics, record
+    for record."""
+    space, cm, _, opt_cost, mu0, sig0 = _setup(0.03)
+    a = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                   optimal_cost=opt_cost, seed=1, k=4)
+    ra = a.run(make_env(NAME, noise=0.03, seed=1), 5)
+    b = controller.BatchController(space, _camel(mu0, sig0), cm,
+                                   optimal_cost=opt_cost, seed=1, k=4)
+    rb = b.run(make_env(NAME, noise=0.03, seed=1), 5, pull_budget=20)
+    assert [(x.t, x.arm, x.cost) for x in ra.records] == \
+        [(x.t, x.arm, x.cost) for x in rb.records]
+
+
+def test_pull_budget_validated():
+    space, cm, _, _, mu0, sig0 = _setup(0.0)
+    ctrl = controller.BatchController(space, _camel(mu0, sig0), cm, k=4)
+    with pytest.raises(ValueError, match="pull_budget"):
+        ctrl.run(make_env(NAME, noise=0.0), 2, pull_budget=0)
+    with pytest.raises(ValueError, match="pull_budget"):
+        ctrl.run(make_env(NAME, noise=0.0), 2, pull_budget=9)
+
+
+# ---------------------------------------------------------------------------
+# Commit tie-breaking (bugfix: the docstring promised most-pulled, the
+# code took the lowest index)
+# ---------------------------------------------------------------------------
+
+
+def test_commit_tie_break_prefers_most_pulled():
+    """Two arms with exactly equal empirical mean: the commit goes to the
+    better-estimated (most-pulled) one, not the lower index."""
+    state = bandit.init_state(4, prior_mu=1.0, prior_sigma=0.1)
+    state = bandit.update(state, 1, 0.5)
+    state = bandit.update(state, 2, 0.5)
+    state = bandit.update(state, 2, 0.5)
+    assert controller.commit_arm(state) == 2
+    # count tie on the tied mean -> lowest index among the tied pair
+    state2 = bandit.init_state(4, prior_mu=1.0, prior_sigma=0.1)
+    state2 = bandit.update(state2, 1, 0.5)
+    state2 = bandit.update(state2, 3, 0.5)
+    assert controller.commit_arm(state2) == 1
+
+
+def test_commit_history_reconstruction_matches_commit_rule():
+    """`_per_record_commit_history` applies the same most-pulled
+    tie-break as the live commit (they share `_argmin_most_pulled`)."""
+    recs = [
+        controller.RoundRecord(t=0, arm=1, knobs={}, energy=0, latency=0,
+                               cost=0.5, regret=0.0, round=0, slot=0),
+        controller.RoundRecord(t=1, arm=2, knobs={}, energy=0, latency=0,
+                               cost=0.5, regret=0.0, round=1, slot=0),
+        controller.RoundRecord(t=2, arm=2, knobs={}, energy=0, latency=0,
+                               cost=0.5, regret=0.0, round=2, slot=0),
+    ]
+    hist = controller.committed_best_history(recs, 1.0, 4)
+    # after record 1 arms 1 and 2 tie at one pull each -> lowest index;
+    # after record 2 arm 2 has more pulls -> arm 2
+    assert hist == [1, 1, 2]

@@ -230,6 +230,29 @@ def test_events_env_fallback_advances_round_index():
 # ---------------------------------------------------------------------------
 
 
+def test_every_fleet_observation_carries_device_id():
+    """Contract (device context): every observation a fleet produces —
+    synchronous `pull_many`, scalar `pull`, and the asynchronous
+    dispatcher path — carries its serving device in
+    `metadata["device"]`, which is what the contextual policy's update
+    signatures consume."""
+    from repro.platform import pull_async
+
+    space = make_space(FLEET)
+    knobs = [space.values(i) for i in range(6)]
+    env = make_env(FLEET, noise=0.0, seed=0)
+    for o in pull_many(env, knobs, round_index=0):
+        assert o.metadata["device"] in range(4)
+    assert env.pull(knobs[0], 3).metadata["device"] == 3
+    comps = pull_async(make_env(FLEET, noise=0.0, seed=0), knobs,
+                       round_index=0)
+    assert len(comps) == 6
+    for c in comps:
+        assert c.obs.metadata["device"] in range(4)
+        # the dispatcher's worker IS the serving device
+        assert c.obs.metadata["device"] == c.worker
+
+
 def test_batch_controller_on_fleet_end_to_end():
     env = make_env(FLEET, noise=0.0, seed=0, speed_jitter=0.02,
                    power_jitter=0.02)
