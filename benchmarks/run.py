@@ -18,7 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
 
 from __future__ import annotations
 
+import argparse
+import contextlib
 import sys
+import time
 import traceback
 
 
@@ -38,19 +41,41 @@ def main() -> None:
         ("E9_ablations", ablations),
         ("E10_E11_fleet_scaling", fleet_scaling),
     ]
-    only = set(sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("filters", nargs="*",
+                    help="run only modules whose name matches a filter")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a repro.obs JSONL trace of the benchmarked "
+                         "runs (summarize with tools/trace_report.py)")
+    args = ap.parse_args()
+    only = set(args.filters)
+    if args.metrics_out:
+        from repro import obs as obs_mod
+        session = obs_mod.observing(args.metrics_out)
+    else:
+        session = contextlib.nullcontext()
+    from repro.obs import tracing as obslog
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in modules:
-        if only and not any(name.startswith(o) or o in name for o in only):
-            continue
-        try:
-            for row_name, us, derived in mod.run():
-                print(f"{row_name},{us:.1f},{derived}")
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            print(f"{name}_FAILED,0.0,{type(e).__name__}: {e}")
-            traceback.print_exc(file=sys.stderr)
+    with session:
+        for name, mod in modules:
+            if only and not any(name.startswith(o) or o in name
+                                for o in only):
+                continue
+            t0 = time.monotonic()
+            rows = 0
+            try:
+                for row_name, us, derived in mod.run():
+                    rows += 1
+                    print(f"{row_name},{us:.1f},{derived}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"{name}_FAILED,0.0,{type(e).__name__}: {e}")
+                traceback.print_exc(file=sys.stderr)
+            # per-module span: the trace carries the sweep timeline even
+            # for modules whose internals emit no events of their own
+            obslog.emit("benchmark.module", dur_s=time.monotonic() - t0,
+                        module=name, rows=rows, ok=rows > 0)
     if failures:
         sys.exit(1)
 

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import time
 from typing import Callable, Dict, List, Optional, Protocol, Sequence, Tuple
 
 import jax
@@ -45,6 +46,7 @@ import numpy as np
 
 from repro.core.arms import ArmSpace
 from repro.core.cost import CostModel, RegretTracker, summarize_run
+from repro.obs import tracing as obslog
 from repro.platform.telemetry import Observation
 
 
@@ -195,8 +197,12 @@ class BatchController:
 
         t = 0
         rnd = 0
+        tracing = obslog.active()
         while t < budget:
             width = min(self.k, budget - t)
+            if tracing:
+                obslog.emit("round.start", round=rnd, t=t, width=width)
+            t0 = time.monotonic()
             self.key, sub = jax.random.split(self.key)
             arms = self._select_group(state, sub, t, width)
             knobs_list = [self.space.values(a) for a in arms]
@@ -206,6 +212,10 @@ class BatchController:
                      for o in obs_list]
             devices = [o.metadata.get("device") for o in obs_list]
             state = self._update_round(state, arms, costs, devices)
+            if tracing:
+                obslog.emit("update", round=rnd, n=len(arms),
+                            arms=[int(a) for a in arms],
+                            policy=type(self.policy).__name__)
             for slot, (arm, knobs, obs, c) in enumerate(
                     zip(arms, knobs_list, obs_list, costs)):
                 r = regret.record(c) if self.optimal_cost is not None else 0.0
@@ -213,13 +223,36 @@ class BatchController:
                     t=t, arm=arm, knobs=knobs, energy=obs.energy,
                     latency=obs.latency, cost=c, regret=float(r), obs=obs,
                     round=rnd, slot=slot))
+                if tracing:
+                    self._emit_pull(records[-1])
                 t += 1
+            if tracing:
+                obslog.emit("round", dur_s=time.monotonic() - t0,
+                            round=rnd, width=width)
             rnd += 1
 
         best_arm = self._commit(state, records)
+        if tracing:
+            obslog.emit("commit", best_arm=int(best_arm),
+                        knobs=self.space.values(best_arm),
+                        n_pulls=len(records))
         return ControllerResult(
             records=records, final_state=state, best_arm=best_arm,
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
+
+    @staticmethod
+    def _emit_pull(rec: "RoundRecord") -> None:
+        """One trace event per pull — the per-pull EDP accounting the
+        trace reports aggregate (`tools/trace_report.py`)."""
+        md = rec.obs.metadata if rec.obs is not None else {}
+        obslog.emit(
+            "pull", t=rec.t, round=rec.round, slot=rec.slot,
+            arm=int(rec.arm), knobs=dict(rec.knobs),
+            energy_j=float(rec.energy), latency_s=float(rec.latency),
+            edp=float(rec.energy) * float(rec.latency),
+            cost=float(rec.cost), regret=float(rec.regret),
+            power_w=float(rec.obs.power) if rec.obs is not None else None,
+            device=md.get("device"), staleness=md.get("staleness"))
 
     def _select_group(self, state, key, t: int, width: int) -> List[int]:
         """Select `width` arms from the frozen posterior with one round
@@ -358,9 +391,14 @@ class AsyncController(BatchController):
         submitted = completed = 0
         events = 0            # posterior-refresh events (waves applied)
 
+        tracing = obslog.active()
         while completed < budget:
+            t0 = time.monotonic()
             n_new = min(self.k - len(in_flight), budget - submitted)
             if n_new > 0:
+                if tracing:
+                    obslog.emit("round.start", round=events, t=submitted,
+                                width=n_new)
                 self.key, sub = jax.random.split(self.key)
                 arms = self._select_group(state, sub, submitted, n_new)
                 for a in arms:
@@ -376,6 +414,11 @@ class AsyncController(BatchController):
                 staleness = events - epoch
                 state = self._update_stale(state, arm, c, staleness,
                                            obs.metadata.get("device"))
+                if tracing:
+                    obslog.emit("update.stale", arm=int(arm), cost=c,
+                                staleness=staleness, wave=events,
+                                device=obs.metadata.get("device"),
+                                policy=type(self.policy).__name__)
                 r = regret.record(c) if self.optimal_cost is not None else 0.0
                 records.append(RoundRecord(
                     t=completed, arm=arm, knobs=knobs, energy=obs.energy,
@@ -386,10 +429,20 @@ class AsyncController(BatchController):
                                        "finished_at": comp.finished_at,
                                        "staleness": staleness}),
                     round=events, slot=slot))
+                if tracing:
+                    self._emit_pull(records[-1])
                 completed += 1
+            if tracing:
+                obslog.emit("round", dur_s=time.monotonic() - t0,
+                            round=events, width=len(wave),
+                            clock_s=disp.clock)
             events += 1
 
         best_arm = self._commit(state, records)
+        if tracing:
+            obslog.emit("commit", best_arm=int(best_arm),
+                        knobs=self.space.values(best_arm),
+                        n_pulls=len(records))
         return ControllerResult(
             records=records, final_state=state, best_arm=best_arm,
             best_knobs=self.space.values(best_arm), cum_regret=regret.curve)

@@ -34,21 +34,42 @@ Modes:
                    late and stale).  Reports the simulated wall-clock and
                    the staleness distribution alongside the usual summary.
 
+Observability (any mode):
+  --metrics-out PATH   open a `repro.obs` session for the run: the
+                   instrumented seams (controller rounds/pulls/updates/
+                   commit, async dispatcher submits/waves, engine
+                   prefill/decode) write a queryable JSONL event trace
+                   with per-pull energy/latency/EDP, and the metrics
+                   snapshot is appended on exit.  Summarize it with
+                   `tools/trace_report.py PATH`.
+  --sensor SPEC    power source: `simulated` (default — the analytical
+                   `Platform.power`, bit-identical to not sensing),
+                   `sysfs` (Jetson INA3221 rails), `nvml`,
+                   `replay:<path>` (deterministic JSONL trace), or
+                   `record:<path>` (capture a trace).  Engine mode
+                   meters every pull with the sensor; other modes meter
+                   the whole run with non-simulated sensors and report
+                   the measurement under a `sensor` output key + a
+                   `sensor.run` trace event.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --mode search \
         --model llama3.2-1b --rounds 49
     PYTHONPATH=src python -m repro.launch.serve --mode fleet \
         --model llama3.2-1b --fleet-size 4 --rounds 49 --policy contextual
     PYTHONPATH=src python -m repro.launch.serve --mode async-fleet \
-        --model llama3.2-1b --fleet-size 4 --rounds 49 --straggler 4
+        --model llama3.2-1b --fleet-size 4 --rounds 49 --straggler 4 \
+        --metrics-out trace.jsonl
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import math
 
+from repro import obs as obs_mod
 from repro.core import baselines, controller, cost, priors
 from repro.platform import make_env, make_space
 from repro.serving import energy as energy_mod
@@ -121,9 +142,15 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
     return out
 
 
-def engine_mode(arch: str, rounds: int, alpha: float, seed: int) -> dict:
+def engine_mode(arch: str, rounds: int, alpha: float, seed: int,
+                sensor: str = "simulated") -> dict:
+    """`sensor` selects the per-pull power source (`repro.obs.make_sensor`
+    spec): every engine pull is metered through it.  The default
+    "simulated" sensor reads the same analytical board model the
+    unmetered path evaluates, bit-identically."""
     name = f"engine/{arch}"
-    env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8)
+    env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8,
+                   sensor=sensor)
     space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e0, l0 = env.pull(space.values(space.corner()), 0)
@@ -269,6 +296,15 @@ def main() -> None:
                     help="async-fleet: device 0 returns results this many "
                          "times slower (telemetry unchanged; 1.0 = "
                          "homogeneous)")
+    ap.add_argument("--sensor", default="simulated",
+                    help="power source: simulated | sysfs | nvml | "
+                         "replay:<path> | record:<path> (engine mode "
+                         "meters every pull; other modes meter the whole "
+                         "run for non-simulated sensors)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's JSONL event trace + metrics "
+                         "snapshot here (summarize with "
+                         "tools/trace_report.py)")
     args = ap.parse_args()
 
     if args.policy == "contextual" and args.mode not in ("fleet",
@@ -276,25 +312,48 @@ def main() -> None:
         ap.error("--policy contextual needs device context; use "
                  "--mode fleet or --mode async-fleet")
 
-    if args.mode == "search":
-        out = search_mode(args.model, args.rounds, args.alpha, args.seed,
-                          policy_name=args.policy, k=max(1, args.k))
-    elif args.mode == "validate":
-        out = validate_mode(args.model, args.requests, args.alpha,
-                            args.seed)
-    elif args.mode == "engine":
-        out = engine_mode(args.arch, args.rounds, args.alpha, args.seed)
-    elif args.mode == "fleet":
-        out = fleet_mode(args.model, args.rounds, args.alpha, args.seed,
-                         args.fleet_size, k=args.k,
-                         policy_name=args.policy)
-    elif args.mode == "async-fleet":
-        out = async_fleet_mode(args.model, args.rounds, args.alpha,
-                               args.seed, args.fleet_size, k=args.k,
-                               straggler=args.straggler,
-                               policy_name=args.policy)
-    else:
-        out = tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
+    def dispatch() -> dict:
+        if args.mode == "search":
+            return search_mode(args.model, args.rounds, args.alpha,
+                               args.seed, policy_name=args.policy,
+                               k=max(1, args.k))
+        if args.mode == "validate":
+            return validate_mode(args.model, args.requests, args.alpha,
+                                 args.seed)
+        if args.mode == "engine":
+            return engine_mode(args.arch, args.rounds, args.alpha,
+                               args.seed, sensor=args.sensor)
+        if args.mode == "fleet":
+            return fleet_mode(args.model, args.rounds, args.alpha,
+                              args.seed, args.fleet_size, k=args.k,
+                              policy_name=args.policy)
+        if args.mode == "async-fleet":
+            return async_fleet_mode(args.model, args.rounds, args.alpha,
+                                    args.seed, args.fleet_size, k=args.k,
+                                    straggler=args.straggler,
+                                    policy_name=args.policy)
+        return tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
+
+    session = obs_mod.observing(args.metrics_out) if args.metrics_out \
+        else contextlib.nullcontext()
+    with session:
+        if args.sensor != "simulated" and args.mode != "engine":
+            # Run-level host power measurement: the engine mode meters
+            # per pull (the sensor goes into the environment); every
+            # other backend is simulation-clocked, so the sensor meters
+            # the whole search instead and its joules/avg/peak land in
+            # the output and the trace.
+            sensor = obs_mod.make_sensor(args.sensor)
+            meter = obs_mod.EnergyMeter(sensor)
+            try:
+                with meter.measure() as m:
+                    out = dispatch()
+            finally:
+                sensor.close()
+            obs_mod.emit("sensor.run", **m.summary())
+            out["sensor"] = m.summary()
+        else:
+            out = dispatch()
     print(json.dumps(out, indent=2, default=str))
 
 

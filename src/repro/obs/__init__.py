@@ -1,0 +1,41 @@
+"""repro.obs — pluggable power sensing, metrics, and tracing.
+
+The observability subsystem behind the `Platform.power` contract:
+
+* `sensors` — `PowerSensor` implementations (`SimulatedSensor` wrapping
+  the analytical `Platform.power`, Jetson `SysfsRailsSensor`,
+  `NVMLSensor`, deterministic `ReplaySensor` / `RecordingSensor` JSONL
+  traces) and `make_sensor("replay:<path>")`-style spec parsing.
+* `meter` — `EnergyMeter`: background sampling at a configurable rate,
+  trapezoidal integration, `measure()` context manager returning
+  joules / avg watts / peak watts.
+* `metrics` — counters, gauges, histograms in a `MetricsRegistry`.
+* `tracing` — span/event emitter with a JSONL exporter and the
+  process-wide observation session: `observing(path)` opens a session,
+  instrumented seams call `emit(...)` (a no-op when no session is open,
+  so default runs stay bit-identical), and closing appends the metrics
+  snapshot to the same file.
+
+Import-light by design (stdlib only at import time): the controller,
+platform, and serving layers all emit through this package, so it must
+never import them back.  See docs/TELEMETRY.md for the sensor matrix,
+trace schema, and capture/replay workflow.
+"""
+
+from repro.obs.meter import EnergyMeter, Measurement
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.sensors import (NVMLSensor, PowerSensor, RecordingSensor,
+                               ReplaySensor, SensorUnavailable,
+                               SimulatedSensor, SysfsRailsSensor,
+                               autodetect_sensor, make_sensor)
+from repro.obs.tracing import (ObsSession, active, emit, observing,
+                               session, set_session)
+
+__all__ = [
+    "EnergyMeter", "Measurement",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "NVMLSensor", "PowerSensor", "RecordingSensor", "ReplaySensor",
+    "SensorUnavailable", "SimulatedSensor", "SysfsRailsSensor",
+    "autodetect_sensor", "make_sensor",
+    "ObsSession", "active", "emit", "observing", "session", "set_session",
+]

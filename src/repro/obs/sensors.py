@@ -1,0 +1,320 @@
+"""Pluggable power sensors behind the `Platform.power` contract.
+
+The paper measures energy on a Jetson AGX Orin's on-board INA3221 power
+rails; this repo's environments historically derived every joule from the
+analytical board model.  `PowerSensor` pins the seam between the two: a
+sensor is anything that answers "how many watts is the device drawing
+right now?", and the `EnergyMeter` (meter.py) integrates those readings
+into joules for an arm pull.
+
+Sensor matrix (see docs/TELEMETRY.md):
+
+* `SimulatedSensor`  — wraps the existing analytical `Platform.power`
+  at the platform's currently actuated level; constant between level
+  changes, so metering it reproduces the analytical energy bit-for-bit.
+* `SysfsRailsSensor` — Jetson INA3221 rails via the sysfs/hwmon hotplug
+  paths (mW under iio, uW under hwmon); sums all discovered rails.
+* `NVMLSensor`       — NVIDIA board power via pynvml (mW), for dGPU
+  hosts; gated — raises `SensorUnavailable` when pynvml is absent.
+* `ReplaySensor`     — replays a JSONL power trace deterministically
+  (each read returns the next sample), so hardware-captured traces run
+  in CI without hardware.
+* `RecordingSensor`  — wraps any sensor and appends every reading to a
+  JSONL trace; `ReplaySensor(path)` of that file replays the identical
+  watt sequence (round-trip tested).
+
+Trace row schema (shared by Replay/Recording): one JSON object per line,
+``{"t": <seconds since recording start>, "watts": <float>}``.
+
+Specs: `make_sensor("simulated" | "sysfs" | "nvml" | "replay:<path>" |
+"record:<path>")` builds a sensor from the CLI spelling (`serve.py
+--sensor ...`).  Hardware sensors raise `SensorUnavailable` — not
+ImportError — when their backing is missing, so callers can fall back or
+fail with a clear message; nothing here imports heavy dependencies at
+module import time.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import time
+from typing import IO, List, Optional, Protocol, Sequence, Union, \
+    runtime_checkable
+
+
+class SensorUnavailable(RuntimeError):
+    """The sensor's backing (sysfs rails, NVML, a trace file) is absent."""
+
+
+@runtime_checkable
+class PowerSensor(Protocol):
+    """Instantaneous device power, in watts."""
+
+    @property
+    def name(self) -> str: ...
+
+    def read_watts(self) -> float: ...
+
+    def close(self) -> None: ...
+
+
+class SimulatedSensor:
+    """The analytical board model as a sensor: reads
+    ``platform.power(platform.current_level, utilization)``.
+
+    The reading is piecewise-constant — it only changes when the platform
+    is actuated (`set_level`) or the workload utilization is updated
+    (`set_utilization`, which environments call per pull from their
+    batch-size → utilization model).  The `EnergyMeter` integrates
+    constant signals exactly, so a simulated-sensor measurement is
+    bit-identical to evaluating `Platform.power` analytically — the
+    property that makes `--sensor simulated` safe to thread through every
+    serving path by default.
+    """
+
+    def __init__(self, platform, utilization: float = 1.0):
+        if platform is None:
+            raise SensorUnavailable(
+                "SimulatedSensor needs a Platform to wrap (its reading IS "
+                "Platform.power); pass the environment's platform")
+        self.platform = platform
+        self.utilization = float(utilization)
+
+    @property
+    def name(self) -> str:
+        return f"simulated:{self.platform.name}"
+
+    def set_utilization(self, utilization: float) -> None:
+        self.utilization = float(utilization)
+
+    def read_watts(self) -> float:
+        return float(self.platform.power(self.platform.current_level,
+                                         self.utilization))
+
+    def close(self) -> None:
+        pass
+
+
+#: Where Jetson power rails surface, in discovery order.  The INA3221's
+#: iio nodes report milliwatts; generic hwmon power files report
+#: microwatts — `SysfsRailsSensor` scales by path.
+SYSFS_RAIL_GLOBS = (
+    # Jetson (L4T <= r32): INA3221 behind the iio subsystem, mW.
+    "/sys/bus/i2c/drivers/ina3221x/*/iio:device*/in_power*_input",
+    "/sys/bus/i2c/drivers/ina3221x/*/iio_device/in_power*_input",
+    # Jetson (L4T >= r34) and mainline: INA3221 as a hwmon chip, uW.
+    "/sys/bus/i2c/drivers/ina3221/*/hwmon/hwmon*/power*_input",
+)
+
+
+class SysfsRailsSensor:
+    """Sum of the board's power rails read from sysfs (Jetson INA3221).
+
+    `paths` overrides discovery (tests point it at a tmpdir); by default
+    the Jetson hotplug globs above are scanned and the sensor raises
+    `SensorUnavailable` when no rail file exists (non-Jetson hosts).
+    Rail files under an ``iio`` node are milliwatts, under ``hwmon``
+    microwatts; a missing or transiently unreadable rail reads as 0 W
+    (rails hotplug on carrier boards) rather than failing a measurement.
+    """
+
+    def __init__(self, paths: Optional[Sequence[str]] = None):
+        if paths is None:
+            paths = [p for g in SYSFS_RAIL_GLOBS for p in sorted(glob.glob(g))]
+        self.paths: List[str] = list(paths)
+        if not self.paths:
+            raise SensorUnavailable(
+                "no INA3221 power-rail files found under "
+                f"{SYSFS_RAIL_GLOBS}; is this a Jetson? (pass paths= to "
+                "override discovery)")
+
+    @property
+    def name(self) -> str:
+        return f"sysfs:{len(self.paths)}rails"
+
+    @staticmethod
+    def _scale(path: str) -> float:
+        return 1e-6 if "hwmon" in path else 1e-3
+
+    def read_watts(self) -> float:
+        total = 0.0
+        for p in self.paths:
+            try:
+                with open(p) as f:
+                    total += float(f.read().strip()) * self._scale(p)
+            except (OSError, ValueError):
+                continue
+        return total
+
+    def close(self) -> None:
+        pass
+
+
+class NVMLSensor:
+    """NVIDIA board power draw via NVML (`nvmlDeviceGetPowerUsage`, mW).
+
+    Imports pynvml lazily and raises `SensorUnavailable` when it is not
+    installed or no device is present — this repo never pip-installs it.
+    """
+
+    def __init__(self, index: int = 0):
+        try:
+            import pynvml
+        except ImportError:
+            raise SensorUnavailable(
+                "NVMLSensor needs pynvml, which is not installed; use "
+                "--sensor simulated, sysfs, or replay:<path>") from None
+        try:
+            pynvml.nvmlInit()
+            self._handle = pynvml.nvmlDeviceGetHandleByIndex(index)
+        except pynvml.NVMLError as e:
+            raise SensorUnavailable(f"NVML init failed: {e}") from None
+        self._pynvml = pynvml
+        self.index = int(index)
+
+    @property
+    def name(self) -> str:
+        return f"nvml:{self.index}"
+
+    def read_watts(self) -> float:
+        return self._pynvml.nvmlDeviceGetPowerUsage(self._handle) / 1000.0
+
+    def close(self) -> None:
+        try:
+            self._pynvml.nvmlShutdown()
+        except self._pynvml.NVMLError:
+            pass
+
+
+class ReplaySensor:
+    """Deterministic playback of a recorded power trace.
+
+    Each `read_watts()` returns the next sample's watts, in file order —
+    call-indexed, not wall-clock-indexed, so a trace replays identically
+    however fast the meter samples it.  Past the end the trace wraps
+    (`loop=True`, the default: a short rails capture can power an
+    arbitrarily long CI run) or holds the final sample (`loop=False`).
+    """
+
+    def __init__(self, source: Union[str, IO[str]], loop: bool = True):
+        if isinstance(source, str):
+            self._label = source
+            try:
+                with open(source) as f:
+                    lines = f.readlines()
+            except OSError as e:
+                raise SensorUnavailable(
+                    f"cannot read power trace {source!r}: {e}") from None
+        else:
+            self._label = getattr(source, "name", "<stream>")
+            lines = source.readlines()
+        self.samples: List[float] = []
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            self.samples.append(float(row["watts"]))
+        if not self.samples:
+            raise SensorUnavailable(
+                f"power trace {self._label!r} contains no samples")
+        self.loop = bool(loop)
+        self._i = 0
+
+    @property
+    def name(self) -> str:
+        return f"replay:{self._label}"
+
+    def read_watts(self) -> float:
+        if self._i >= len(self.samples):
+            if self.loop:
+                self._i = 0
+            else:
+                return self.samples[-1]
+        w = self.samples[self._i]
+        self._i += 1
+        return w
+
+    def close(self) -> None:
+        pass
+
+
+class RecordingSensor:
+    """Wrap a sensor; append every reading to a JSONL trace.
+
+    Captures hardware runs for deterministic CI replay: the recorded
+    file's watt sequence is exactly what `ReplaySensor` will return,
+    reading for reading (round-trip tested in tests/test_obs.py).
+    """
+
+    def __init__(self, inner, path: Union[str, IO[str]],
+                 clock=time.monotonic):
+        self.inner = inner
+        self._own_sink = isinstance(path, str)
+        self._sink = open(path, "w") if self._own_sink else path
+        self._clock = clock
+        self._t0 = clock()
+
+    @property
+    def name(self) -> str:
+        return f"record({self.inner.name})"
+
+    def set_utilization(self, utilization: float) -> None:
+        fn = getattr(self.inner, "set_utilization", None)
+        if fn is not None:
+            fn(utilization)
+
+    def read_watts(self) -> float:
+        w = float(self.inner.read_watts())
+        self._sink.write(json.dumps(
+            {"t": round(self._clock() - self._t0, 9), "watts": w}) + "\n")
+        return w
+
+    def close(self) -> None:
+        self._sink.flush()
+        if self._own_sink:
+            self._sink.close()
+        self.inner.close()
+
+
+def autodetect_sensor(platform=None):
+    """Best available real sensor, falling back to the analytical model:
+    sysfs rails, then NVML, then `SimulatedSensor(platform)` (which
+    raises `SensorUnavailable` when no platform is given either)."""
+    for cls in (SysfsRailsSensor, NVMLSensor):
+        try:
+            return cls()
+        except SensorUnavailable:
+            continue
+    return SimulatedSensor(platform)
+
+
+def make_sensor(spec, platform=None):
+    """Build a sensor from its CLI spelling (`serve.py --sensor ...`):
+
+        simulated        analytical Platform.power (needs `platform`)
+        sysfs            Jetson INA3221 rails
+        nvml             NVIDIA NVML board power
+        replay:<path>    deterministic JSONL trace playback
+        record:<path>    autodetected sensor, recorded to <path>
+
+    A `PowerSensor` instance passes through unchanged, so APIs can accept
+    either a spec string or a ready sensor.
+    """
+    if not isinstance(spec, str):
+        return spec
+    if spec == "simulated":
+        return SimulatedSensor(platform)
+    if spec == "sysfs":
+        return SysfsRailsSensor()
+    if spec == "nvml":
+        return NVMLSensor()
+    if spec.startswith("replay:"):
+        return ReplaySensor(spec[len("replay:"):])
+    if spec.startswith("record:"):
+        return RecordingSensor(autodetect_sensor(platform),
+                               spec[len("record:"):])
+    raise ValueError(
+        f"unknown sensor spec {spec!r}; expected simulated, sysfs, nvml, "
+        f"replay:<path>, or record:<path>")

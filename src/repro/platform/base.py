@@ -46,6 +46,7 @@ import dataclasses
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
     runtime_checkable
 
+from repro.obs import tracing as obslog
 from repro.platform.telemetry import Observation
 
 
@@ -292,6 +293,10 @@ class AsyncDispatcher:
                           finished_at=finish)
         self._pending.append(comp)
         self._tickets += 1
+        if obslog.active():
+            obslog.emit("dispatch.submit", ticket=comp.ticket, worker=w,
+                        logical_round=logical_round,
+                        submitted_at=self.clock, finished_at=finish)
         return comp.ticket
 
     def pop_wave(self) -> List[Completion]:
@@ -306,4 +311,9 @@ class AsyncDispatcher:
         self._pending = [c for c in self._pending if c.finished_at != t]
         self.clock = t
         self._waves += 1
+        if obslog.active():
+            obslog.emit("dispatch.wave", wave=self._waves - 1,
+                        size=len(wave), clock_s=t,
+                        in_flight=len(self._pending),
+                        tickets=[c.ticket for c in wave])
         return wave

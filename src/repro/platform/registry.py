@@ -315,7 +315,8 @@ def _tpu_elastic(model: str, *, model_shards: int = 16, **kw):
               models=_config_archs)
 def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                  max_seq_len: int = 128, prompt_len: int = 16,
-                 max_new_tokens: int = 8, arrival_rate: float = 1.0):
+                 max_new_tokens: int = 8, arrival_rate: float = 1.0,
+                 sensor=None, sample_hz: float = 20.0):
     import jax
     import repro.configs as configs_mod
     from repro.models.registry import bundle_for
@@ -335,4 +336,5 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
     return EngineEnvironment(engine, board, work,
                              arrival_rate=arrival_rate,
                              prompt_len=prompt_len,
-                             max_new_tokens=max_new_tokens, seed=seed)
+                             max_new_tokens=max_new_tokens, seed=seed,
+                             sensor=sensor, sample_hz=sample_hz)

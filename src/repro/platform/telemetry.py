@@ -38,9 +38,20 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 
+def _check_arrival_rate(arrival_rate: float) -> None:
+    # lambda <= 0 means "requests never arrive": the accumulation wait is
+    # undefined (division by zero) or negative, which would silently poison
+    # every latency/cost downstream.  Fail at the seam with a clear message.
+    if arrival_rate <= 0:
+        raise ValueError(
+            f"arrival_rate must be positive (requests/s), got "
+            f"{arrival_rate!r}; the queueing model divides by lambda")
+
+
 def queue_wait(batch: int, arrival_rate: float) -> float:
     """Mean in-queue wait while a batch of `batch` accumulates at rate
     lambda (paper Eq. 7 first term): (b - 1) / (2 lambda)."""
+    _check_arrival_rate(arrival_rate)
     return (batch - 1) / (2.0 * arrival_rate)
 
 
@@ -48,6 +59,7 @@ def saturation_backlog(batch_time_s: float, batch: int, arrival_rate: float,
                        n_requests: int, n_servers: float = 1.0) -> float:
     """Mean extra latency from queue growth when service is slower than
     arrivals, over a finite horizon of ceil(n_requests / b) batches."""
+    _check_arrival_rate(arrival_rate)
     n_batches = int(np.ceil(n_requests / batch))
     return max(0.0, batch_time_s / n_servers - batch / arrival_rate) \
         * (n_batches - 1) / 2.0

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.registry import ModelBundle
+from repro.obs import EnergyMeter, make_sensor
+from repro.obs import tracing as obslog
 from repro.platform import BaseEnvironment, DVFSPlatform, Observation, observe
 
 
@@ -89,6 +91,13 @@ class InferenceEngine:
         tok.block_until_ready()
         t_decode = time.monotonic() - t0
 
+        if obslog.active():
+            obslog.emit("engine.prefill", dur_s=t_prefill, batch=b,
+                        prompt_len=prompt_len)
+            obslog.emit("engine.decode", dur_s=t_decode, batch=b,
+                        tokens=b * max_new_tokens,
+                        tokens_per_s=b * max_new_tokens / t_decode
+                        if t_decode > 0 else None)
         return out, EngineStats(prefill_s=t_prefill, decode_s=t_decode,
                                 tokens_out=b * max_new_tokens)
 
@@ -96,14 +105,23 @@ class InferenceEngine:
 class EngineEnvironment(BaseEnvironment):
     """Camel Environment backed by the real engine: pulling an arm serves
     one batch of synthetic prompts at that batch size and converts measured
-    wall time into an `Observation` via the analytical board power model
-    at the arm's frequency level (CPU stand-in for the on-board power
-    monitor; on a Jetson/TPU deployment this is replaced by the power
-    rail/perf-state telemetry).  Registry name: "engine/<arch>"."""
+    wall time into an `Observation`.
+
+    Power comes from a pluggable `repro.obs` sensor (`sensor=` accepts a
+    `PowerSensor` or a spec string like ``"replay:trace.jsonl"``): each
+    pull is wrapped in an `EnergyMeter.measure()` window sampling the
+    sensor at `sample_hz`.  The default (`sensor=None`) evaluates the
+    analytical board model directly — and the out-of-the-box
+    ``"simulated"`` sensor wraps that same model, whose constant
+    per-pull reading the meter integrates exactly, so both paths produce
+    bit-identical observations (asserted in tests/test_obs.py).  On a
+    Jetson/dGPU deployment pass ``"sysfs"`` / ``"nvml"`` to use measured
+    rail power instead.  Registry name: "engine/<arch>"."""
 
     def __init__(self, engine: InferenceEngine, board, work,
                  arrival_rate: float = 1.0, prompt_len: int = 32,
-                 max_new_tokens: int = 16, seed: int = 0):
+                 max_new_tokens: int = 16, seed: int = 0,
+                 sensor=None, sample_hz: float = 20.0):
         self.engine = engine
         self.board = board
         self.work = work
@@ -112,25 +130,43 @@ class EngineEnvironment(BaseEnvironment):
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
         self.rng = np.random.default_rng(seed)
+        self.sensor = make_sensor(sensor, platform=self.platform) \
+            if sensor is not None else None
+        self.meter = EnergyMeter(self.sensor, hz=sample_hz) \
+            if self.sensor is not None else None
 
     def pull(self, knobs: Dict, round_index: int) -> Observation:
         batch = int(knobs["batch"])
         level = self.platform.level_of(knobs["freq_mhz"])
         self.platform.set_level(level)
+        util = self.work.utilization(batch)
         vocab = self.engine.bundle.cfg.vocab_size
         prompts = [self.rng.integers(1, vocab, size=self.prompt_len)
                    .astype(np.int32) for _ in range(batch)]
-        _, st = self.engine.generate(prompts, self.max_new_tokens)
+        m = None
+        if self.meter is not None:
+            set_util = getattr(self.sensor, "set_utilization", None)
+            if set_util is not None:
+                set_util(util)
+            with self.meter.measure() as m:
+                _, st = self.engine.generate(prompts, self.max_new_tokens)
+        else:
+            _, st = self.engine.generate(prompts, self.max_new_tokens)
 
         # Frequency scaling of measured time (CPU measures f_max behavior):
         factor = self.work.freq_factor(self.board, level) \
             / self.work.freq_factor(self.board, self.board.n_levels - 1)
         t_batch = st.total_s * factor
-        p = self.board.power(level, self.work.utilization(batch))
+        p = self.board.power(level, util) if m is None else m.avg_watts
+        metadata = {"backend": "engine", "prefill_s": st.prefill_s,
+                    "decode_s": st.decode_s}
+        if m is not None:
+            metadata.update(sensor=m.sensor_name,
+                            sensor_joules=m.joules,
+                            sensor_peak_w=m.peak_watts,
+                            sensor_samples=m.n_samples)
         # Single-batch horizon (n_requests = batch): no saturation backlog —
         # a live pull measures one batch, it cannot observe queue growth.
         return observe(p, t_batch, batch, self.arrival_rate,
                        n_requests=batch, tokens=st.tokens_out,
-                       metadata={"backend": "engine",
-                                 "prefill_s": st.prefill_s,
-                                 "decode_s": st.decode_s})
+                       metadata=metadata)

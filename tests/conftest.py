@@ -6,12 +6,23 @@ modules must still run on hosts without it (no-network environments).  When
 hypothesis is absent we install a stub module whose `@given` marks the test
 as skipped and whose strategies are inert placeholders, so importing
 `from hypothesis import given, settings, strategies as st` keeps working.
+
+Every skip carries `HYPOTHESIS_MISSING_REASON`, so a `pytest -rs` report
+states exactly why the property cases did not run — and CI (which installs
+hypothesis) greps its `-rs` output for that marker to assert the property
+tests actually ran rather than silently skipping (.github/workflows/ci.yml,
+tier-1 job).
 """
 
 from __future__ import annotations
 
 import sys
 import types
+
+#: Single source of truth for the skip message; CI greps for this text.
+HYPOTHESIS_MISSING_REASON = (
+    "hypothesis not installed; property-based case skipped "
+    "(pip install hypothesis to run it)")
 
 try:  # pragma: no cover - exercised implicitly when hypothesis exists
     import hypothesis  # noqa: F401
@@ -34,9 +45,7 @@ except ImportError:
 
     def _given(*args, **kwargs):
         def deco(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed; property-based case "
-                       "skipped")(fn)
+            return pytest.mark.skip(reason=HYPOTHESIS_MISSING_REASON)(fn)
         return deco
 
     def _settings(*args, **kwargs):

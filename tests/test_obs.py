@@ -1,0 +1,375 @@
+"""repro.obs: sensors, energy metering, tracing, and the bit-identity
+contract that lets `--sensor simulated` ride along on every default run.
+
+Covers (ISSUE satellites): the ReplaySensor <-> RecordingSensor
+round-trip, EnergyMeter trapezoid accuracy against closed-form ramps and
+its constant-signal exactness, EngineEnvironment bit-identity with and
+without a simulated sensor, sysfs rail scaling, spec parsing, trace
+content for an instrumented controller run, and the trace_report
+summarizer."""
+
+import io
+import json
+import os
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import baselines, controller, cost, priors
+from repro.obs import meter as meter_mod
+from repro.obs import sensors as sensors_mod
+from repro.obs import tracing as tracing_mod
+from repro.platform import DVFSPlatform, make_env, make_space
+from repro.serving import energy
+from repro.serving.engine import EngineEnvironment, EngineStats
+
+DATA_TRACE = os.path.join(os.path.dirname(__file__), "data",
+                          "rails_small.jsonl")
+
+
+# ---------------------------------------------------------------------------
+# Sensors
+# ---------------------------------------------------------------------------
+
+
+class _SeqSensor:
+    """Emits a fixed watt sequence, then holds the last value."""
+
+    name = "seq"
+
+    def __init__(self, seq):
+        self.seq = list(seq)
+        self.i = 0
+        self.closed = False
+
+    def read_watts(self):
+        w = self.seq[min(self.i, len(self.seq) - 1)]
+        self.i += 1
+        return w
+
+    def close(self):
+        self.closed = True
+
+
+def test_recording_replay_round_trip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    seq = [2.0, 5.0, 8.0, 11.0, 14.0]
+    rec = obs.RecordingSensor(_SeqSensor(seq), path)
+    assert [rec.read_watts() for _ in seq] == seq
+    rec.close()
+    assert rec.inner.closed
+
+    rep = obs.ReplaySensor(path)
+    assert [rep.read_watts() for _ in seq] == seq
+    # rows carry monotonically non-decreasing timestamps
+    with open(path) as f:
+        ts = [json.loads(line)["t"] for line in f]
+    assert ts == sorted(ts) and len(ts) == len(seq)
+
+
+def test_replay_sensor_loop_and_hold():
+    src = io.StringIO('{"t": 0, "watts": 1.0}\n{"t": 1, "watts": 2.0}\n')
+    looping = obs.ReplaySensor(src)
+    assert [looping.read_watts() for _ in range(5)] == [1, 2, 1, 2, 1]
+    src.seek(0)
+    holding = obs.ReplaySensor(src, loop=False)
+    assert [holding.read_watts() for _ in range(4)] == [1, 2, 2, 2]
+
+
+def test_replay_sensor_reads_checked_in_rails_trace():
+    rep = obs.ReplaySensor(DATA_TRACE)
+    assert len(rep.samples) == 50
+    assert rep.read_watts() == 12.0          # first recorded sample
+    assert all(5.0 < w < 25.0 for w in rep.samples)
+
+
+def test_replay_sensor_missing_or_empty_trace(tmp_path):
+    with pytest.raises(obs.SensorUnavailable, match="cannot read"):
+        obs.ReplaySensor(str(tmp_path / "nope.jsonl"))
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("\n")
+    with pytest.raises(obs.SensorUnavailable, match="no samples"):
+        obs.ReplaySensor(str(empty))
+
+
+def test_sysfs_rails_scaling_and_resilience(tmp_path):
+    iio = tmp_path / "iio"
+    hwmon = tmp_path / "hwmon"
+    iio.mkdir(), hwmon.mkdir()
+    rail_mw = iio / "in_power0_input"
+    rail_mw.write_text("12000\n")            # iio path: mW -> 12 W
+    rail_uw = hwmon / "power1_input"
+    rail_uw.write_text("15000000\n")         # hwmon path: uW -> 15 W
+    gone = tmp_path / "unplugged" / "power2_input"   # never created
+
+    s = obs.SysfsRailsSensor(paths=[str(rail_mw), str(rail_uw), str(gone)])
+    assert s.read_watts() == pytest.approx(27.0)
+    assert s.name == "sysfs:3rails"
+    with pytest.raises(obs.SensorUnavailable):
+        obs.SysfsRailsSensor(paths=[])
+
+
+def test_simulated_sensor_tracks_platform_actuation():
+    plat = DVFSPlatform(energy.JETSON_AGX_ORIN)
+    s = obs.SimulatedSensor(plat, utilization=0.5)
+    w0 = s.read_watts()
+    assert w0 == float(plat.power(plat.current_level, 0.5))
+    plat.set_level(plat.n_levels - 1)
+    s.set_utilization(1.0)
+    assert s.read_watts() == float(plat.power(plat.n_levels - 1, 1.0))
+    assert s.read_watts() > w0
+
+
+def test_make_sensor_specs(tmp_path):
+    plat = DVFSPlatform(energy.JETSON_AGX_ORIN)
+    assert isinstance(obs.make_sensor("simulated", platform=plat),
+                      obs.SimulatedSensor)
+    with pytest.raises(obs.SensorUnavailable, match="Platform"):
+        obs.make_sensor("simulated")
+    rep = obs.make_sensor(f"replay:{DATA_TRACE}")
+    assert isinstance(rep, obs.ReplaySensor)
+    # a ready sensor instance passes through unchanged
+    assert obs.make_sensor(rep) is rep
+    rec = obs.make_sensor(f"record:{tmp_path / 'out.jsonl'}", platform=plat)
+    assert isinstance(rec, obs.RecordingSensor)
+    rec.read_watts(), rec.close()
+    with pytest.raises(ValueError, match="unknown sensor spec"):
+        obs.make_sensor("thermocouple")
+
+
+def test_nvml_sensor_unavailable_without_pynvml(monkeypatch):
+    monkeypatch.setitem(sys.modules, "pynvml", None)
+    with pytest.raises(obs.SensorUnavailable, match="pynvml"):
+        obs.NVMLSensor()
+
+
+# ---------------------------------------------------------------------------
+# EnergyMeter
+# ---------------------------------------------------------------------------
+
+
+class _Bench:
+    """Deterministic (clock, sensor) pair: the sensor reads f(t) at the
+    clock's current time; the test advances time between samples."""
+
+    def __init__(self, f):
+        self.t = 0.0
+        self.f = f
+
+    def clock(self):
+        return self.t
+
+    @property
+    def sensor(self):
+        bench = self
+
+        class _S:
+            name = "bench"
+
+            def read_watts(self):
+                return bench.f(bench.t)
+
+            def close(self):
+                pass
+
+        return _S()
+
+
+def test_energy_meter_trapezoid_exact_on_linear_ramp():
+    # w(t) = 2 + 3t over [0, 4]: integral = 2*4 + 1.5*16 = 32 J exactly
+    # (the trapezoid rule is exact for piecewise-linear power).
+    bench = _Bench(lambda t: 2.0 + 3.0 * t)
+    m = obs.EnergyMeter(bench.sensor, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        for t in (1.0, 2.0, 3.0):
+            bench.t = t
+            meas.sample()
+        bench.t = 4.0
+    assert meas.times == [0.0, 1.0, 2.0, 3.0, 4.0]
+    assert meas.joules == 32.0
+    assert meas.avg_watts == pytest.approx(8.0)
+    assert meas.peak_watts == 14.0
+    assert meas.duration_s == 4.0
+
+
+def test_energy_meter_trapezoid_second_order_on_quadratic():
+    # w(t) = t^2 over [0, 2]: closed form 8/3; the composite trapezoid
+    # with h=0.25 overestimates by exactly (b-a) h^2 w''/12 = 1/48
+    # (w'' is constant), pinning the integrator's second-order accuracy.
+    bench = _Bench(lambda t: t * t)
+    m = obs.EnergyMeter(bench.sensor, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        for i in range(1, 8):
+            bench.t = i * 0.25
+            meas.sample()
+        bench.t = 2.0
+    assert meas.joules - 8.0 / 3.0 == pytest.approx(1.0 / 48.0)
+
+
+def test_energy_meter_constant_signal_is_exact():
+    # Exactness contract: avg_watts must be the sensor's float, not a
+    # joules/duration reconstruction (this is what keeps the simulated
+    # sensor bit-identical to the analytical path).
+    bench = _Bench(lambda t: 17.3)
+    m = obs.EnergyMeter(bench.sensor, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        bench.t = 0.7
+    assert meas.avg_watts == 17.3            # exact, not approx
+    assert meas.joules == 17.3 * meas.duration_s
+    summary = meas.summary()
+    assert summary["n_samples"] == 2 and summary["sensor"] == "bench"
+
+
+def test_energy_meter_background_thread_samples():
+    bench = _Bench(lambda t: 5.0)
+    m = obs.EnergyMeter(bench.sensor, hz=200.0)
+    import time as _time
+    with m.measure() as meas:
+        _time.sleep(0.05)
+    assert meas.n_samples >= 3               # entry + exit + background
+    assert meas.avg_watts == 5.0
+    with pytest.raises(ValueError):
+        obs.EnergyMeter(bench.sensor, hz=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine bit-identity: sensor=None vs sensor="simulated"
+# ---------------------------------------------------------------------------
+
+
+def _stub_engine(vocab=64):
+    return types.SimpleNamespace(
+        bundle=types.SimpleNamespace(
+            cfg=types.SimpleNamespace(vocab_size=vocab)),
+        generate=lambda prompts, mnt: (
+            None, EngineStats(prefill_s=0.25, decode_s=0.75,
+                              tokens_out=len(prompts) * mnt)))
+
+
+def test_engine_env_bit_identical_with_simulated_sensor():
+    board = energy.JETSON_AGX_ORIN
+    work = energy.ORIN_WORKLOADS["llama3.2-1b"]
+    mk = lambda sensor: EngineEnvironment(  # noqa: E731
+        _stub_engine(), board, work, seed=7, sensor=sensor)
+    plain, metered = mk(None), mk("simulated")
+    for knobs in ({"freq_mhz": board.freqs_mhz[2], "batch": 8},
+                  {"freq_mhz": board.freqs_mhz[-1], "batch": 16}):
+        a = plain.pull(knobs, 0)
+        b = metered.pull(knobs, 0)
+        assert (a.energy, a.latency, a.power) == (b.energy, b.latency,
+                                                  b.power)
+        assert a.batch_time == b.batch_time
+        # the metered pull additionally reports the measurement
+        assert b.metadata["sensor"].startswith("simulated:")
+        assert b.metadata["sensor_samples"] >= 2
+        assert b.metadata["sensor_peak_w"] == a.power
+
+
+# ---------------------------------------------------------------------------
+# Metrics + tracing
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_registry_counters_gauges_histograms():
+    reg = obs.MetricsRegistry()
+    reg.counter("pulls_total").inc()
+    reg.counter("pulls_total").inc(2)
+    reg.gauge("clock_s").set(3.5)
+    h = reg.histogram("edp")
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    snap = {(r["name"], r["metric_type"]): r for r in reg.snapshot()}
+    assert snap[("pulls_total", "counter")]["value"] == 3
+    assert snap[("clock_s", "gauge")]["value"] == 3.5
+    hist = snap[("edp", "histogram")]
+    assert hist["count"] == 3 and hist["min"] == 0.5 and hist["max"] == 50.0
+    with pytest.raises(TypeError):
+        reg.counter("clock_s")               # name already a gauge
+
+
+def test_emit_without_session_is_noop():
+    assert not tracing_mod.active()
+    tracing_mod.emit("pull", arm=1)          # must not raise
+
+
+def test_observing_writes_events_spans_and_metrics(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    with obs.observing(path) as session:
+        obs.emit("round.start", round=0, width=4)
+        obs.emit("pull", arm=3, energy_j=1.5, latency_s=2.0, edp=3.0,
+                 cost=0.5, knobs={"batch": 8})
+        session.emit("round", kind="span", dur_s=0.25, round=0, width=4)
+    assert not tracing_mod.active()          # session restored
+    rows = [json.loads(line) for line in open(path)]
+    kinds = {r["kind"] for r in rows}
+    assert kinds == {"event", "span", "metric"}
+    pull = next(r for r in rows if r["name"] == "pull")
+    assert pull["attrs"]["edp"] == 3.0
+    metrics = {r["name"]: r for r in rows if r["kind"] == "metric"}
+    assert metrics["pulls_total"]["value"] == 1
+    assert metrics["pull_edp"]["count"] == 1
+    assert metrics["rounds_total"]["value"] == 1
+    assert metrics["events_total.round"]["value"] == 1
+
+
+def test_controller_run_produces_queryable_trace(tmp_path):
+    name = "jetson/llama3.2-1b/landscape"
+    space = make_space(name)
+    cm = cost.CostModel(alpha=0.5)
+    env0 = make_env(name, noise=0.0)
+    e_ref, l_ref = env0.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    mk_policy = lambda: baselines.make_policy(  # noqa: E731
+        "camel", prior_mu=mu0, prior_sigma=sig0)
+
+    path = str(tmp_path / "run.jsonl")
+    ctrl = controller.BatchController(space, mk_policy(), cm, seed=0, k=4)
+    with obs.observing(path):
+        res = ctrl.run(make_env(name, noise=0.0, seed=0), 3)
+    rows = [json.loads(line) for line in open(path)]
+    by_name = {}
+    for r in rows:
+        by_name.setdefault(r["name"], []).append(r)
+    assert len(by_name["round.start"]) == 3
+    assert len(by_name["pull"]) == 12        # 3 rounds x k=4
+    assert len(by_name["update"]) == 3
+    assert len(by_name["commit"]) == 1
+    assert len(by_name["round"]) == 3        # spans with real durations
+    assert all(r["kind"] == "span" and r["dur_s"] >= 0
+               for r in by_name["round"])
+    for r in by_name["pull"]:
+        a = r["attrs"]
+        assert a["edp"] == pytest.approx(a["energy_j"] * a["latency_s"])
+        assert set(a["knobs"]) == {"freq_mhz", "batch"}
+    assert by_name["commit"][0]["attrs"]["best_arm"] == res.best_arm
+    # the same run, untraced, is bit-identical (observability is passive)
+    res2 = controller.BatchController(space, mk_policy(), cm, seed=0, k=4) \
+        .run(make_env(name, noise=0.0, seed=0), 3)
+    assert res2.best_arm == res.best_arm
+    np.testing.assert_array_equal(res2.cum_regret, res.cum_regret)
+
+
+def test_trace_report_renders_per_arm_table(tmp_path):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    try:
+        import trace_report
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "t.jsonl")
+    with obs.observing(path):
+        for arm, e, l in ((3, 2.0, 1.0), (3, 4.0, 2.0), (7, 1.0, 1.0)):
+            obs.emit("pull", arm=arm, energy_j=e, latency_s=l, edp=e * l,
+                     cost=e * l, knobs={"batch": arm})
+        obs.emit("commit", best_arm=7, knobs={"batch": 7}, n_pulls=3)
+    text = trace_report.report(path)
+    assert "per-arm summary (3 pulls, 2 distinct arms" in text
+    assert "committed: arm 7 (batch=7)" in text
+    marked = [ln for ln in text.splitlines()
+              if ln.lstrip().startswith("*")]
+    assert len(marked) == 1 and " 7 " in marked[0]   # committed arm marked
+    assert "metrics snapshot:" in text

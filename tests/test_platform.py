@@ -43,6 +43,20 @@ def test_queueing_latency_n_servers_drains_faster():
     assert fast.backlog < slow.backlog
 
 
+@pytest.mark.parametrize("bad_rate", [0.0, -1.0, -0.5])
+def test_queueing_model_rejects_nonpositive_arrival_rate(bad_rate):
+    """lambda <= 0 must fail loudly at the seam (division by zero /
+    negative waits would otherwise silently poison every cost)."""
+    with pytest.raises(ValueError, match="arrival_rate must be positive"):
+        queue_wait(8, bad_rate)
+    with pytest.raises(ValueError, match="arrival_rate must be positive"):
+        saturation_backlog(1.0, 8, bad_rate, 2500)
+    with pytest.raises(ValueError, match="arrival_rate must be positive"):
+        queueing_latency(1.0, 8, bad_rate)
+    with pytest.raises(ValueError, match="arrival_rate must be positive"):
+        observe(10.0, 1.0, 8, bad_rate)
+
+
 # ---------------------------------------------------------------------------
 # Observation
 # ---------------------------------------------------------------------------
@@ -130,6 +144,22 @@ def test_parse_name_and_available():
     assert "jetson/llama3.2-1b/landscape" in available_envs()
     assert "engine/smollm-360m/live" in available_envs()
     assert not any("<model>" in n for n in available_envs())
+
+
+def test_registry_every_platform_has_model_lister():
+    """Contract: each register_env'd platform also registers a `models=`
+    lister, so available_envs() stays concrete and model typos fail with
+    the real alternatives (docs/ENVIRONMENTS.md 'Adding a backend')."""
+    from repro.platform import registry
+    platforms = {p for (p, _scenario) in registry._BUILDERS}
+    missing = sorted(platforms - set(registry._MODELS))
+    assert not missing, \
+        f"platforms registered without a models= lister: {missing}"
+    for p in sorted(platforms):
+        names = registry._MODELS[p]()
+        assert names, f"platform {p!r} lister returned no models"
+        assert all(isinstance(m, str) and m and "<" not in m
+                   for m in names)
 
 
 def test_registry_name_errors():

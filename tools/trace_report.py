@@ -1,0 +1,174 @@
+"""Summarize a `repro.obs` JSONL trace: per-arm energy/latency/EDP tables.
+
+Reads the trace a run wrote via ``--metrics-out`` (serve.py, benchmarks)
+and renders:
+
+* the per-arm pull summary — pulls, mean energy, latency, EDP, cost,
+  mean power, mean staleness (async runs), with the committed arm marked;
+* span totals by name (where the run's wall-clock went);
+* the closing metrics snapshot (counters / gauges / histograms);
+* the run-level sensor measurement, when a non-simulated sensor ran.
+
+    python tools/trace_report.py out.jsonl [more.jsonl ...]
+
+The input is plain JSONL (see docs/TELEMETRY.md for the schema), so any
+other tool — jq, pandas, a notebook — can query the same file; this
+report is just the quick look.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+
+def load_rows(path: str) -> List[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                print(f"!! skipping malformed line: {line[:80]}",
+                      file=sys.stderr)
+    return rows
+
+
+def _fmt(value, width: int = 10) -> str:
+    if value is None:
+        return "-".rjust(width)
+    if isinstance(value, float):
+        return f"{value:.4g}".rjust(width)
+    return str(value).rjust(width)
+
+
+def _knobs_str(knobs: Optional[dict]) -> str:
+    if not knobs:
+        return "?"
+    return " ".join(f"{k}={v}" for k, v in sorted(knobs.items()))
+
+
+def _mean(values: List[float]) -> Optional[float]:
+    values = [v for v in values if v is not None]
+    return sum(values) / len(values) if values else None
+
+
+def arm_table(rows: List[dict]) -> List[str]:
+    pulls = [r for r in rows if r.get("name") == "pull"]
+    if not pulls:
+        return ["no pull events in trace"]
+    commits = [r for r in rows if r.get("name") == "commit"]
+    committed = commits[-1].get("attrs", {}).get("best_arm") \
+        if commits else None
+    by_arm: Dict[int, List[dict]] = defaultdict(list)
+    for r in pulls:
+        by_arm[r.get("attrs", {}).get("arm", -1)].append(
+            r.get("attrs", {}))
+    header = (f"{'':2}{'arm':>4} {'knobs':<28}{'pulls':>6}"
+              f"{'mean_E_J':>10}{'mean_L_s':>10}{'mean_EDP':>10}"
+              f"{'mean_cost':>10}{'mean_W':>10}{'mean_stale':>11}")
+    lines = [f"per-arm summary ({len(pulls)} pulls, "
+             f"{len(by_arm)} distinct arms; * = committed):", header]
+    stats = []
+    for arm, attrs in by_arm.items():
+        stats.append({
+            "arm": arm,
+            "knobs": _knobs_str(attrs[0].get("knobs")),
+            "pulls": len(attrs),
+            "energy": _mean([a.get("energy_j") for a in attrs]),
+            "latency": _mean([a.get("latency_s") for a in attrs]),
+            "edp": _mean([a.get("edp") for a in attrs]),
+            "cost": _mean([a.get("cost") for a in attrs]),
+            "power": _mean([a.get("power_w") for a in attrs]),
+            "stale": _mean([a.get("staleness") for a in attrs]),
+        })
+    stats.sort(key=lambda s: (s["cost"] is None, s["cost"], s["arm"]))
+    for s in stats:
+        mark = " *" if s["arm"] == committed else "  "
+        lines.append(
+            f"{mark}{s['arm']:>4} {s['knobs']:<28}{s['pulls']:>6}"
+            f"{_fmt(s['energy'])}{_fmt(s['latency'])}{_fmt(s['edp'])}"
+            f"{_fmt(s['cost'])}{_fmt(s['power'])}{_fmt(s['stale'], 11)}")
+    if committed is not None:
+        knobs = _knobs_str(commits[-1].get("attrs", {}).get("knobs"))
+        lines.append(f"committed: arm {committed} ({knobs})")
+    return lines
+
+
+def span_table(rows: List[dict]) -> List[str]:
+    spans = [r for r in rows if r.get("kind") == "span"]
+    if not spans:
+        return []
+    by_name: Dict[str, List[float]] = defaultdict(list)
+    for r in spans:
+        by_name[r.get("name", "?")].append(float(r.get("dur_s", 0.0)))
+    lines = ["", "span totals:",
+             f"{'name':<20}{'count':>8}{'total_s':>12}{'mean_s':>12}"]
+    for name in sorted(by_name, key=lambda n: -sum(by_name[n])):
+        durs = by_name[name]
+        lines.append(f"{name:<20}{len(durs):>8}{_fmt(sum(durs), 12)}"
+                     f"{_fmt(sum(durs) / len(durs), 12)}")
+    return lines
+
+
+def metric_table(rows: List[dict]) -> List[str]:
+    metrics = [r for r in rows if r.get("kind") == "metric"]
+    if not metrics:
+        return []
+    lines = ["", "metrics snapshot:"]
+    for m in metrics:
+        if m.get("metric_type") == "histogram":
+            lines.append(
+                f"  {m.get('name'):<28} count={m.get('count')} "
+                f"mean={_fmt(m.get('mean'), 1).strip()} "
+                f"min={_fmt(m.get('min'), 1).strip()} "
+                f"max={_fmt(m.get('max'), 1).strip()}")
+        else:
+            lines.append(f"  {m.get('name'):<28} "
+                         f"{_fmt(m.get('value'), 1).strip()}")
+    return lines
+
+
+def sensor_lines(rows: List[dict]) -> List[str]:
+    runs = [r for r in rows if r.get("name") == "sensor.run"]
+    if not runs:
+        return []
+    a = runs[-1].get("attrs", {})
+    return ["", f"sensor run measurement ({a.get('sensor')}): "
+            f"{_fmt(a.get('joules'), 1).strip()} J over "
+            f"{_fmt(a.get('duration_s'), 1).strip()} s, "
+            f"avg {_fmt(a.get('avg_watts'), 1).strip()} W, "
+            f"peak {_fmt(a.get('peak_watts'), 1).strip()} W "
+            f"({a.get('n_samples')} samples)"]
+
+
+def report(path: str) -> str:
+    rows = load_rows(path)
+    counts = defaultdict(int)
+    for r in rows:
+        counts[r.get("kind", "?")] += 1
+    head = ", ".join(f"{n} {k}" for k, n in sorted(counts.items()))
+    lines = [f"== {path}: {len(rows)} rows ({head})", ""]
+    lines += arm_table(rows)
+    lines += span_table(rows)
+    lines += sensor_lines(rows)
+    lines += metric_table(rows)
+    return "\n".join(lines)
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: trace_report.py <trace.jsonl> ...")
+        return 2
+    for path in argv:
+        print(report(path))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
