@@ -1,0 +1,94 @@
+"""E12 — engine decode throughput: fused fori_loop vs per-token loop.
+
+Measures greedy decode tokens/s (and per-token latency) on the smoke
+model across batch sizes for both engine decode paths.  The fused path
+runs the whole generate inside one compiled computation (one host sync);
+the loop path round-trips to the host every token, so the gap is the
+dispatch overhead the fusion removes — it widens with batch size because
+the per-step compute stays cheap while the per-step sync cost is fixed.
+
+Asserts the headline claim: fused >= 2x loop tokens/s at batch >= 8 on
+CPU.  Also writes the full sweep to ``BENCH_engine.json`` for the CI
+artifact (one record per (batch, impl) cell plus the speedup summary).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from benchmarks.common import Row
+from repro.models.registry import bundle_for
+from repro.serving.engine import InferenceEngine
+
+ARCH = "smollm-360m"
+BATCHES = (1, 4, 8, 16)
+PROMPT_LEN = 8
+NEW_TOKENS = 32
+MAX_SEQ_LEN = 64
+OUT_JSON = os.environ.get("BENCH_ENGINE_JSON", "BENCH_engine.json")
+
+
+def _prompts(batch: int) -> list:
+    rng = np.random.default_rng(0)
+    return [rng.integers(1, 100, size=PROMPT_LEN).astype(np.int32)
+            for _ in range(batch)]
+
+
+def _measure(eng: InferenceEngine, batch: int) -> dict:
+    prompts = _prompts(batch)
+    eng.generate(prompts, max_new_tokens=NEW_TOKENS)  # warm the trace
+    t0 = time.perf_counter()
+    out, st = eng.generate(prompts, max_new_tokens=NEW_TOKENS)
+    wall = time.perf_counter() - t0
+    toks = batch * NEW_TOKENS
+    return {"impl": eng.decode_impl, "batch": batch,
+            "new_tokens": NEW_TOKENS,
+            "tokens_per_s": st.tokens_per_s,
+            "us_per_token": 1e6 * st.decode_s / toks,
+            "decode_s": st.decode_s, "wall_s": wall,
+            "checksum": int(np.sum(out) % 100000)}
+
+
+def run() -> list:
+    rows: list[Row] = []
+    cfg = C.get_smoke(ARCH)
+    b = bundle_for(cfg)
+    params = b.init_params(jax.random.PRNGKey(0))
+    engines = {impl: InferenceEngine(b, params, max_batch=max(BATCHES),
+                                     max_seq_len=MAX_SEQ_LEN,
+                                     decode_impl=impl)
+               for impl in ("fused", "loop")}
+    records, speedups = [], {}
+    for batch in BATCHES:
+        cells = {}
+        for impl in ("fused", "loop"):
+            r = _measure(engines[impl], batch)
+            cells[impl] = r
+            records.append(r)
+            rows.append((f"engine_decode_{impl}_b{batch}",
+                         r["us_per_token"],
+                         f"tokens_per_s={r['tokens_per_s']:.1f}"))
+        # identical greedy tokens => identical checksum between impls
+        assert cells["fused"]["checksum"] == cells["loop"]["checksum"], \
+            f"fused/loop token mismatch at batch {batch}"
+        speedup = (cells["fused"]["tokens_per_s"]
+                   / max(cells["loop"]["tokens_per_s"], 1e-9))
+        speedups[batch] = speedup
+        rows.append((f"engine_speedup_b{batch}", 0.0,
+                     f"fused_over_loop={speedup:.2f}x"))
+    big = [s for bsz, s in speedups.items() if bsz >= 8]
+    assert max(big) >= 2.0, \
+        f"fused decode < 2x loop at batch >= 8: {speedups}"
+    with open(OUT_JSON, "w") as f:
+        json.dump({"arch": ARCH, "prompt_len": PROMPT_LEN,
+                   "new_tokens": NEW_TOKENS, "cells": records,
+                   "speedup_fused_over_loop":
+                       {str(k): v for k, v in speedups.items()}},
+                  f, indent=2)
+    return rows

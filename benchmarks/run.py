@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
     E11 heterogeneity beyond-paper  shared vs device-contextual posterior
                       under persistent per-device speed offsets (same
                       module: benchmarks.fleet_scaling)
+    E12 engine_throughput  decode tokens/s and per-token latency vs
+                      batch, fused fori_loop vs per-token loop (writes
+                      BENCH_engine.json)
 """
 
 from __future__ import annotations
@@ -26,9 +29,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablations, config_search, fleet_scaling, kernels,
-                            landscape, roofline, sensitivity, tpu_serving,
-                            validation)
+    from benchmarks import (ablations, config_search, engine_throughput,
+                            fleet_scaling, kernels, landscape, roofline,
+                            sensitivity, tpu_serving, validation)
 
     modules = [
         ("E1_landscape", landscape),
@@ -40,6 +43,7 @@ def main() -> None:
         ("E8_kernels", kernels),
         ("E9_ablations", ablations),
         ("E10_E11_fleet_scaling", fleet_scaling),
+        ("E12_engine_throughput", engine_throughput),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("filters", nargs="*",

@@ -252,7 +252,8 @@ class BatchController:
             edp=float(rec.energy) * float(rec.latency),
             cost=float(rec.cost), regret=float(rec.regret),
             power_w=float(rec.obs.power) if rec.obs is not None else None,
-            device=md.get("device"), staleness=md.get("staleness"))
+            device=md.get("device"), staleness=md.get("staleness"),
+            tokens_per_s=md.get("tokens_per_s"))
 
     def _select_group(self, state, key, t: int, width: int) -> List[int]:
         """Select `width` arms from the frozen posterior with one round

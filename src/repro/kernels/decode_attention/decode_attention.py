@@ -5,8 +5,10 @@ One new token per sequence attends to a long KV cache.  Grid:
 head) group of G=H/KVH query heads is processed as one (G, D) tile so GQA
 costs one pass over the cache regardless of G.
 
-The valid cache length (pos + 1) arrives as a scalar-prefetch operand;
-blocks entirely beyond it are skipped (pl.when), which is what makes
+The valid cache window arrives as two scalar-prefetch operands — a
+per-sequence end (`kv_len`, exclusive) and start (`kv_start`, inclusive;
+left-padded prompts have a contiguous invalid prefix) — and blocks
+entirely outside [start, end) are skipped (pl.when), which is what makes
 short-context decodes cheap even with a max-length cache.
 """
 
@@ -27,12 +29,15 @@ DEFAULT_BLOCK_KV = 512
 _NEG = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+def _decode_kernel(len_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
                    acc_ref, m_ref, l_ref, *,
-                   scale: float, block_kv: int):
+                   scale: float, block_kv: int, kv_heads: int):
+    i = pl.program_id(0)
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
-    kv_len = len_ref[0]
+    bi = i // kv_heads
+    kv_len = len_ref[bi]
+    kv_start = start_ref[bi]
 
     @pl.when(ki == 0)
     def _init():
@@ -42,7 +47,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
     k_start = ki * block_kv
 
-    @pl.when(k_start < kv_len)
+    @pl.when((k_start < kv_len) & (k_start + block_kv > kv_start))
     def _compute():
         q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
         k = k_ref[0].astype(jnp.float32)                    # [bk, D]
@@ -51,7 +56,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
                                 preferred_element_type=jnp.float32)
         kpos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        s = jnp.where(kpos < kv_len, s, _NEG)
+        s = jnp.where((kpos >= kv_start) & (kpos < kv_len), s, _NEG)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
@@ -72,12 +77,15 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("scale", "block_kv",
                                              "interpret"))
 def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
-                         kv_len: jax.Array, *,
+                         kv_len: jax.Array,
+                         kv_start: Optional[jax.Array] = None, *,
                          scale: Optional[float] = None,
                          block_kv: int = DEFAULT_BLOCK_KV,
                          interpret: bool = False) -> jax.Array:
-    """q: [B, H, D] (one token); k/v: [B, S, KVH, D]; kv_len: scalar int32
-    (valid cache entries).  Returns [B, H, D]."""
+    """q: [B, H, D] (one token); k/v: [B, S, KVH, D]; kv_len: int32 scalar
+    or [B] (valid cache entries, exclusive end); kv_start: optional int32
+    scalar or [B] (first valid entry — left-padded prompts).
+    Returns [B, H, D]."""
     b, h, d = q.shape
     s, kvh = k.shape[1], k.shape[2]
     g = h // kvh
@@ -89,17 +97,23 @@ def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
     qt = q.reshape(b, kvh, g, d).reshape(b * kvh, g, d)
     kt = k.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
     vt = v.transpose(0, 2, 1, 3).reshape(b * kvh, s, d)
-    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (1,))
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    if kv_start is None:
+        kv_start = jnp.zeros((), jnp.int32)
+    starts = jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32), (b,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b * kvh, nk),
         in_specs=[
-            pl.BlockSpec((1, g, d), lambda i, kk, lens: (i, 0, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda i, kk, lens: (i, kk, 0)),
-            pl.BlockSpec((1, block_kv, d), lambda i, kk, lens: (i, kk, 0)),
+            pl.BlockSpec((1, g, d), lambda i, kk, lens, starts: (i, 0, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda i, kk, lens, starts: (i, kk, 0)),
+            pl.BlockSpec((1, block_kv, d),
+                         lambda i, kk, lens, starts: (i, kk, 0)),
         ],
-        out_specs=pl.BlockSpec((1, g, d), lambda i, kk, lens: (i, 0, 0)),
+        out_specs=pl.BlockSpec((1, g, d),
+                               lambda i, kk, lens, starts: (i, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, d), jnp.float32),
             pltpu.VMEM((g,), jnp.float32),
@@ -108,11 +122,12 @@ def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
     )
 
     out = pl.pallas_call(
-        functools.partial(_decode_kernel, scale=scale, block_kv=block_kv),
+        functools.partial(_decode_kernel, scale=scale, block_kv=block_kv,
+                          kv_heads=kvh),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * kvh, g, d), q.dtype),
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(lens, qt, kt, vt)
+    )(lens, starts, qt, kt, vt)
     return out.reshape(b, kvh, g, d).reshape(b, h, d)

@@ -11,11 +11,18 @@ from repro.kernels.decode_attention.decode_attention import (
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
-def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
+def decode_attention(q, k, v, kv_len, kv_start=None, *,
+                     scale: Optional[float] = None,
                      block_kv: int = 512, interpret: Optional[bool] = None):
+    """Single-token decode attention over a KV cache.
+
+    kv_len (scalar or [B]) is the exclusive end of the valid cache window;
+    kv_start (optional, scalar or [B]) its inclusive start — nonzero for
+    left-padded prompts whose pad slots must not be attended.
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return decode_attention_fwd(q, k, v, kv_len, scale=scale,
+    return decode_attention_fwd(q, k, v, kv_len, kv_start, scale=scale,
                                 block_kv=block_kv, interpret=interpret)
 
 

@@ -9,8 +9,10 @@ import jax
 import jax.numpy as jnp
 
 
-def decode_attention_ref(q, k, v, kv_len, *, scale: Optional[float] = None):
-    """q: [B, H, D]; k/v: [B, S, KVH, D]; kv_len scalar -> [B, H, D]."""
+def decode_attention_ref(q, k, v, kv_len, kv_start=None, *,
+                         scale: Optional[float] = None):
+    """q: [B, H, D]; k/v: [B, S, KVH, D]; kv_len scalar or [B] (exclusive
+    end); kv_start optional scalar or [B] (inclusive start) -> [B, H, D]."""
     b, h, d = q.shape
     s, kvh = k.shape[1], k.shape[2]
     g = h // kvh
@@ -18,8 +20,12 @@ def decode_attention_ref(q, k, v, kv_len, *, scale: Optional[float] = None):
         scale = 1.0 / math.sqrt(d)
     qg = (q.astype(jnp.float32) * scale).reshape(b, kvh, g, d)
     sc = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
-    mask = jnp.arange(s)[None, None, None, :] < kv_len
-    sc = jnp.where(mask, sc, -1e30)
+    ends = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    starts = jnp.zeros((b,), jnp.int32) if kv_start is None else \
+        jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32), (b,))
+    idx = jnp.arange(s)[None, :]
+    mask = (idx < ends[:, None]) & (idx >= starts[:, None])
+    sc = jnp.where(mask[:, None, None, :], sc, -1e30)
     p = jax.nn.softmax(sc, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(b, h, d).astype(q.dtype)

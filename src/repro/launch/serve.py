@@ -143,14 +143,17 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
 
 
 def engine_mode(arch: str, rounds: int, alpha: float, seed: int,
-                sensor: str = "simulated") -> dict:
+                sensor: str = "simulated",
+                decode_impl: str = "fused") -> dict:
     """`sensor` selects the per-pull power source (`repro.obs.make_sensor`
     spec): every engine pull is metered through it.  The default
     "simulated" sensor reads the same analytical board model the
-    unmetered path evaluates, bit-identically."""
+    unmetered path evaluates, bit-identically.  `decode_impl` picks the
+    engine's decode path: "fused" (jitted fori_loop, one host sync per
+    generate) or "loop" (per-token reference)."""
     name = f"engine/{arch}"
     env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8,
-                   sensor=sensor)
+                   sensor=sensor, decode_impl=decode_impl)
     space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e0, l0 = env.pull(space.values(space.corner()), 0)
@@ -296,6 +299,11 @@ def main() -> None:
                     help="async-fleet: device 0 returns results this many "
                          "times slower (telemetry unchanged; 1.0 = "
                          "homogeneous)")
+    ap.add_argument("--decode-impl", default="fused",
+                    choices=["fused", "loop"],
+                    help="engine mode decode path: fused (jitted "
+                         "fori_loop, one host sync per generate) or "
+                         "loop (per-token reference)")
     ap.add_argument("--sensor", default="simulated",
                     help="power source: simulated | sysfs | nvml | "
                          "replay:<path> | record:<path> (engine mode "
@@ -322,7 +330,8 @@ def main() -> None:
                                  args.seed)
         if args.mode == "engine":
             return engine_mode(args.arch, args.rounds, args.alpha,
-                               args.seed, sensor=args.sensor)
+                               args.seed, sensor=args.sensor,
+                               decode_impl=args.decode_impl)
         if args.mode == "fleet":
             return fleet_mode(args.model, args.rounds, args.alpha,
                               args.seed, args.fleet_size, k=args.k,

@@ -283,14 +283,39 @@ def _dequantize_kv(codes: Array, scale: Array, dtype) -> Array:
     return (codes.astype(jnp.float32) * scale).astype(dtype)
 
 
+def _pad_valid_at(pad_mask: Array, kpos: Array) -> Array:
+    """Gather per-sequence validity at global key positions.
+
+    pad_mask: [B, P] bool over global positions (True = real token);
+    positions >= P (decode-written slots) are always valid.  kpos: [S]
+    int32 global positions (may be out of range for invalid ring slots —
+    those are already masked by the caller).  Returns [B, S] bool."""
+    p = pad_mask.shape[1]
+    idx = jnp.clip(kpos, 0, p - 1)
+    gathered = pad_mask[:, idx]
+    in_range = (kpos >= 0) & (kpos < p)
+    return jnp.where(in_range[None, :], gathered, True)
+
+
 def cached_attention(params: Params, spec: AttnSpec, x: Array,
                      cache: Params, pos: Array, ring: bool = False,
+                     pad_mask: Optional[Array] = None,
                      ) -> Tuple[Array, Params]:
     """Decode-step attention: x [B,1,D], cache k/v [B,S,KVH,HD], pos scalar
     (current token's global position).  `ring=True` => the cache is a ring
     buffer of size S == sliding_window (RoPE applied pre-insert; positions
-    remain global so rotation stays consistent).
-    Returns (attn output [B,1,D], updated cache)."""
+    remain global so rotation stays consistent).  `pad_mask` ([B, P] bool,
+    True = real) invalidates left-pad prompt slots per sequence; positions
+    >= P are always valid.
+    Returns (attn output [B,1,D], updated cache).
+
+    When `spec.attn_impl == "flash"` and the layer is a plain causal one
+    (no ring buffer, no sliding window, no logit softcap) the attention
+    itself runs through the Pallas split-K decode kernel
+    (`kernels/decode_attention`): one pass over the cache per KV head with
+    the valid [start, pos] window as scalar-prefetch operands, so the
+    decode hot path reads only live cache blocks.  Unsupported layer
+    shapes fall back to the naive masked softmax below."""
     b = x.shape[0]
     s_cache = cache["k"].shape[1]
     quantized = "k_scale" in cache
@@ -316,6 +341,19 @@ def cached_attention(params: Params, spec: AttnSpec, x: Array,
         v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
         new_cache = {"k": k, "v": v}
 
+    if (spec.attn_impl == "flash" and not ring
+            and spec.sliding_window == 0 and spec.logit_softcap == 0.0):
+        from repro.kernels.decode_attention.ops import decode_attention
+        kv_start = None
+        if pad_mask is not None:
+            # Left-pad invalid slots form a contiguous prefix (the engine
+            # contract), so the valid window start is just the pad count.
+            kv_start = jnp.sum(~pad_mask, axis=1).astype(jnp.int32)
+        ctx = decode_attention(q[:, 0], k, v,
+                               jnp.asarray(pos + 1, jnp.int32), kv_start,
+                               scale=spec.query_scale)
+        return attn_out(params, spec, ctx.reshape(b, 1, -1)), new_cache
+
     if ring:
         # Ring buffer: entry at index i holds global position
         #   pos - ((pos - i) mod S); valid iff within the window & <= pos.
@@ -324,12 +362,16 @@ def cached_attention(params: Params, spec: AttnSpec, x: Array,
         kpos = pos - age
         valid = kpos >= jnp.maximum(0, pos - s_cache + 1)
         mask = valid[None, None, :]
+        if pad_mask is not None:
+            mask = mask & _pad_valid_at(pad_mask, kpos)[:, None, :]
     else:
         idx = jnp.arange(s_cache)
         mask = (idx <= pos)
         if spec.sliding_window > 0:
             mask = mask & (idx > pos - spec.sliding_window)
         mask = mask[None, None, :]
+        if pad_mask is not None:
+            mask = mask & _pad_valid_at(pad_mask, idx)[:, None, :]
 
     ctx = mha_attend(q, k, v, jnp.broadcast_to(mask, (b, 1, s_cache)), spec)
     out = attn_out(params, spec, ctx)
@@ -338,9 +380,12 @@ def cached_attention(params: Params, spec: AttnSpec, x: Array,
 
 def prefill_into_cache(params: Params, spec: AttnSpec, x: Array,
                        cache: Params, ring: bool = False,
+                       pad_mask: Optional[Array] = None,
                        ) -> Tuple[Array, Params]:
     """Prefill: write S prompt tokens into the cache, return attn output.
-    For ring caches only the last `window` tokens are retained."""
+    For ring caches only the last `window` tokens are retained.
+    `pad_mask` ([B, S] bool, True = real token) masks left-pad slots out
+    of the keys so ragged batches match their unpadded logits."""
     b, s, _ = x.shape
     s_cache = cache["k"].shape[1]
     quantized = "k_scale" in cache
@@ -384,9 +429,12 @@ def prefill_into_cache(params: Params, spec: AttnSpec, x: Array,
         new_cache = write(k, v)
     if spec.attn_impl == "flash":
         from repro.models import flash
-        ctx = flash.flash_attention(q, k, v, spec, causal=True)
+        ctx = flash.flash_attention(q, k, v, spec, causal=True,
+                                    kv_valid=pad_mask)
     else:
         mask = causal_mask(s, s, window=spec.sliding_window)
+        if pad_mask is not None:
+            mask = mask & pad_mask[:, None, :]
         ctx = mha_attend(q, k, v, jnp.broadcast_to(mask, (b, s, s)), spec)
     return attn_out(params, spec, ctx), new_cache
 

@@ -235,8 +235,12 @@ def init_cache(cfg: EncDecConfig, batch: int, max_len: int) -> Params:
 
 def prefill(cfg: EncDecConfig, params: Params, inputs, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            ) -> Tuple[Array, Params]:
-    """Encode speech + start decoding with a BOS token (tokens[:, :1])."""
+            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    """Encode speech + start decoding with a BOS token (tokens[:, :1]).
+    `attn_mask` is accepted for engine API uniformity but unused: the
+    target side starts from a single BOS token (no ragged prompt), and
+    cross attention already masks by `memory_len`."""
+    del attn_mask
     if isinstance(inputs, dict):
         speech = inputs["speech_embeddings"]
         tokens = inputs["tokens"]
@@ -265,7 +269,9 @@ def prefill(cfg: EncDecConfig, params: Params, inputs, cache: Params,
 
 
 def decode_step(cfg: EncDecConfig, params: Params, token: Array,
-                cache: Params, pos: Array) -> Tuple[Array, Params]:
+                cache: Params, pos: Array,
+                attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    del attn_mask  # see prefill
     spec = cfg.attn_spec()
     b = token.shape[0]
     x = common.embed(params, token[:, None])

@@ -29,7 +29,8 @@ _NEG = -1e30
 def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
                     q_offset: int = 0, causal: bool = True,
                     block_kv: int = 512,
-                    window: Optional[Array] = None) -> Array:
+                    window: Optional[Array] = None,
+                    kv_valid: Optional[Array] = None) -> Array:
     """q: [B,Sq,H,D], k/v: [B,Sk,KVH,D] -> [B,Sq,H*D].
 
     Online-softmax over KV blocks (fp32 accumulators).  Blocks that are
@@ -37,6 +38,9 @@ def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
     window) still execute under lax.scan but contribute zeros; XLA's
     loop-invariant hoisting keeps them cheap, and the Pallas kernel skips
     them outright via its grid.
+
+    `kv_valid` ([B, Sk] bool, True = attend) masks out per-sequence key
+    slots — the left-pad mask for ragged batched prefill.
     """
     b, sq, h, hd = q.shape
     sk, kvh = k.shape[1], k.shape[2]
@@ -49,6 +53,8 @@ def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
         pad = blk - sk % blk
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid is not None:
+            kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
         sk_p = sk + pad
     else:
         sk_p = sk
@@ -61,10 +67,14 @@ def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
     vb = v.reshape(b, nblk, blk, kvh, hd)
     kb = jnp.moveaxis(kb, 1, 0)                           # [N,B,blk,KVH,D]
     vb = jnp.moveaxis(vb, 1, 0)
+    if kv_valid is None:
+        validb = jnp.ones((nblk, b, blk), bool)
+    else:
+        validb = jnp.moveaxis(kv_valid.reshape(b, nblk, blk), 1, 0)
 
     def body(carry, inputs):
         acc, m_run, l_run = carry                         # acc [B,KV,G,Sq,D]
-        kc, vc, blk_idx = inputs
+        kc, vc, valid, blk_idx = inputs
         kpos = blk_idx * blk + jnp.arange(blk)            # [blk]
 
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc.astype(jnp.float32))
@@ -83,7 +93,8 @@ def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
         elif spec.sliding_window > 0:
             mask = mask & (kpos[None, :] > qpos[:, None]
                            - spec.sliding_window)
-        s = jnp.where(mask[None, None, None], s, _NEG)
+        s = jnp.where(mask[None, None, None]
+                      & valid[:, None, None, None, :], s, _NEG)
 
         m_new = jnp.maximum(m_run, s.max(axis=-1))        # [B,KV,G,Sq]
         p = jnp.exp(s - m_new[..., None])
@@ -97,7 +108,7 @@ def flash_attention(q: Array, k: Array, v: Array, spec: AttnSpec,
     m0 = jnp.full((b, kvh, g, sq), _NEG, jnp.float32)
     l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
     (acc, m_run, l_run), _ = jax.lax.scan(
-        body, (acc0, m0, l0), (kb, vb, jnp.arange(nblk)))
+        body, (acc0, m0, l0), (kb, vb, validb, jnp.arange(nblk)))
 
     out = acc / jnp.maximum(l_run[..., None], 1e-30)      # [B,KV,G,Sq,D]
     out = jnp.moveaxis(out, 3, 1)                         # [B,Sq,KV,G,D]

@@ -43,8 +43,9 @@ class ModelBundle:
     def prefill(self, params, inputs, cache, **kw):
         return self.module.prefill(self.cfg, params, inputs, cache, **kw)
 
-    def decode_step(self, params, token, cache, pos):
-        return self.module.decode_step(self.cfg, params, token, cache, pos)
+    def decode_step(self, params, token, cache, pos, **kw):
+        return self.module.decode_step(self.cfg, params, token, cache, pos,
+                                       **kw)
 
     @property
     def name(self) -> str:

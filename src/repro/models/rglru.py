@@ -352,7 +352,12 @@ def loss_fn(cfg: RGLRUConfig, params: Params, batch: Dict[str, Array],
 
 def prefill(cfg: RGLRUConfig, params: Params, tokens: Array, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            ) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    # attn_mask accepted for engine API uniformity but unused: the RG-LRU
+    # recurrent blocks fold every input token into their state, so masking
+    # only the attention blocks cannot make left-padded batches match
+    # their unpadded logits (same noted boundary as rwkv6).
+    del attn_mask
     x = common.embed(params, tokens, scale_by_sqrt_dim=True)
     if prefix_embeddings is not None:
         x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
@@ -363,7 +368,9 @@ def prefill(cfg: RGLRUConfig, params: Params, tokens: Array, cache: Params,
 
 
 def decode_step(cfg: RGLRUConfig, params: Params, token: Array,
-                cache: Params, pos: Array) -> Tuple[Array, Params]:
+                cache: Params, pos: Array,
+                attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    del attn_mask  # see prefill: recurrence makes left-pad unmaskable
     x = common.embed(params, token[:, None], scale_by_sqrt_dim=True)
     x, cache = _run(cfg, params, x, cache, pos, "decode")
     x = common.rmsnorm(params["final_norm"], x)

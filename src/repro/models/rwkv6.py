@@ -365,7 +365,13 @@ def loss_fn(cfg: RWKV6Config, params: Params, batch: Dict[str, Array],
 
 def prefill(cfg: RWKV6Config, params: Params, tokens: Array, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            ) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    # attn_mask is accepted for engine API uniformity but unused: the
+    # recurrence folds every input token into the state, so left-pad
+    # tokens perturb it regardless of any attention-style mask (a
+    # recurrent engine should right-align or per-sequence-reset instead
+    # — noted boundary, same as the pre-mask transformer behavior).
+    del attn_mask
     x = common.embed(params, tokens)
     if prefix_embeddings is not None:
         x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
@@ -397,8 +403,9 @@ def prefill(cfg: RWKV6Config, params: Params, tokens: Array, cache: Params,
 
 
 def decode_step(cfg: RWKV6Config, params: Params, token: Array,
-                cache: Params, pos: Array) -> Tuple[Array, Params]:
-    del pos  # stateful model: position-free
+                cache: Params, pos: Array,
+                attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+    del pos, attn_mask  # stateful model: position-free (mask: see prefill)
     x = common.embed(params, token[:, None])
     x = common.layernorm(params["ln0"], x)
     x, state = _run(cfg, params, x, cache, chunked=False)

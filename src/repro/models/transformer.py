@@ -406,8 +406,11 @@ def _interleave(cfg: TransformerConfig, params: Params, x: Array,
 
 def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
             cache: Params, prefix_embeddings: Optional[Array] = None,
-            ) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
     """Run the prompt through the model, filling the cache.
+    `attn_mask` ([B, S] bool, True = real token) masks left-padded slots
+    out of every layer's keys (ragged batched prefill); prefix embedding
+    slots are always valid.
     Returns (logits for the last position [B, V], cache)."""
     _, norm = common.make_norm(cfg.norm)
     spec = cfg.attn_spec()
@@ -415,6 +418,10 @@ def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
     x = common.embed(params, tokens, cfg.embed_scale)
     if prefix_embeddings is not None:
         x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
+        if attn_mask is not None:
+            p = prefix_embeddings.shape[1]
+            attn_mask = jnp.concatenate(
+                [jnp.ones((x.shape[0], p), bool), attn_mask], axis=1)
 
     def step_fn(lp, c, x, is_local: bool):
         lspec = dataclasses.replace(
@@ -422,7 +429,8 @@ def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
         h = norm(lp["norm_attn"], x)
         a, nc = common.prefill_into_cache(
             lp["attn"], lspec, h, c,
-            ring=is_local and c["k"].shape[1] == cfg.sliding_window)
+            ring=is_local and c["k"].shape[1] == cfg.sliding_window,
+            pad_mask=attn_mask)
         if cfg.post_norms:
             a = norm(lp["post_norm_attn"], a)
         x = x + a
@@ -444,9 +452,12 @@ def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
 
 
 def decode_step(cfg: TransformerConfig, params: Params, token: Array,
-                cache: Params, pos: Array) -> Tuple[Array, Params]:
+                cache: Params, pos: Array,
+                attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
     """token: [B] int32; pos: scalar int32 (global position of `token`).
-    Returns (logits [B, V], updated cache)."""
+    `attn_mask` ([B, P] bool over global positions, True = real token)
+    keeps left-padded prompt slots masked during decode; positions >= P
+    are always valid.  Returns (logits [B, V], updated cache)."""
     _, norm = common.make_norm(cfg.norm)
     spec = cfg.attn_spec()
     x = common.embed(params, token[:, None], cfg.embed_scale)
@@ -457,7 +468,7 @@ def decode_step(cfg: TransformerConfig, params: Params, token: Array,
         h = norm(lp["norm_attn"], x)
         ring = is_local and c["k"].shape[1] == cfg.sliding_window
         a, nc = common.cached_attention(lp["attn"], lspec, h, c, pos,
-                                        ring=ring)
+                                        ring=ring, pad_mask=attn_mask)
         if cfg.post_norms:
             a = norm(lp["post_norm_attn"], a)
         x = x + a

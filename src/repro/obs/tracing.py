@@ -86,7 +86,9 @@ class ObsSession:
         "engine.prefill": [("counter", "engine_prefills_total", None),
                            ("histogram", "engine_prefill_s", "dur_s")],
         "engine.decode": [("counter", "engine_decodes_total", None),
-                          ("histogram", "engine_decode_s", "dur_s")],
+                          ("histogram", "engine_decode_s", "dur_s"),
+                          ("histogram", "engine.tokens_per_s",
+                           "tokens_per_s")],
         "sensor.run": [("gauge", "sensor_joules", "joules"),
                        ("gauge", "sensor_avg_w", "avg_watts"),
                        ("gauge", "sensor_peak_w", "peak_watts")],

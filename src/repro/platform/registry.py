@@ -316,7 +316,8 @@ def _tpu_elastic(model: str, *, model_shards: int = 16, **kw):
 def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                  max_seq_len: int = 128, prompt_len: int = 16,
                  max_new_tokens: int = 8, arrival_rate: float = 1.0,
-                 sensor=None, sample_hz: float = 20.0):
+                 sensor=None, sample_hz: float = 20.0,
+                 decode_impl: str = "fused", prompt_bucket: int = 16):
     import jax
     import repro.configs as configs_mod
     from repro.models.registry import bundle_for
@@ -330,7 +331,9 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
     bundle = bundle_for(cfg)
     params = bundle.init_params(jax.random.PRNGKey(seed))
     engine = InferenceEngine(bundle, params, max_batch=max_batch,
-                             max_seq_len=max_seq_len)
+                             max_seq_len=max_seq_len,
+                             decode_impl=decode_impl,
+                             prompt_bucket=prompt_bucket)
     board = energy.JETSON_AGX_ORIN
     work = energy.ORIN_WORKLOADS["llama3.2-1b"]
     return EngineEnvironment(engine, board, work,

@@ -1,16 +1,36 @@
-"""Batched JAX inference engine: prefill + greedy decode with KV cache.
+"""Batched JAX inference engine: prefill + fused greedy decode with KV cache.
 
 This is the real-model backend behind the Camel controller (the simulator
 estimates (E, L); this engine produces them by actually running a model —
 on TPU with wall-clock+power integration, on CPU for the examples/tests
 with simulated energy from the analytical board model).
 
+Hot-path design (what makes the measured (E, L) reflect hardware, not
+Python dispatch):
+
+* **Fused decode** — the default decode path is one jitted
+  ``lax.fori_loop`` keeping the greedy token, KV cache, and an on-device
+  output buffer (``dynamic_update_slice``) inside a single compiled
+  computation: one host sync per `generate` call instead of one per
+  token.  The per-token Python loop survives as ``decode_impl="loop"``,
+  the reference the fused path is asserted bit-identical against.
+* **Prompt bucketing** — padded prompt lengths are rounded up to
+  ``prompt_bucket`` multiples, so a controller sweep over ragged prompts
+  compiles the prefill once per (batch, bucket) instead of once per
+  exact length.
+* **Cache reuse** — ``init_cache`` buffers are allocated once per batch
+  size and reused across `generate` calls (cache shapes depend only on
+  (batch, max_seq_len); all updates are functional, so the pooled zero
+  buffers are never mutated).  A sweep over batch arms allocates and
+  compiles each shape exactly once (`compile_counts` exposes the jit
+  cache sizes for the retrace regression test).
+
 Left-padding batches the ragged prompts: all sequences share position
-indices so a single prefill call fills the cache; padded slots are masked
-out by giving them positions inside the prompt (attention over pad tokens
-of the *same* sequence is harmless for random-weight examples and keeps
-the engine entirely static-shaped; a production engine would thread a
-pad mask through the models' attention — noted as a TODO boundary).
+indices so a single prefill call fills the cache, and a boolean pad mask
+is threaded through the models' attention (``attn_mask``) so padded
+slots are masked rather than attended — ragged and unpadded prompts
+produce identical per-sequence logits on attention models (recurrent
+families accept and ignore the mask; see their module docstrings).
 """
 
 from __future__ import annotations
@@ -34,72 +54,191 @@ class EngineStats:
     prefill_s: float
     decode_s: float
     tokens_out: int
+    decode_impl: str = "fused"
 
     @property
     def total_s(self) -> float:
         return self.prefill_s + self.decode_s
 
+    @property
+    def tokens_per_s(self) -> float:
+        """Decode throughput (generated tokens / decode wall-clock)."""
+        return self.tokens_out / self.decode_s if self.decode_s > 0 else 0.0
+
 
 class InferenceEngine:
-    """Greedy batched generation with jitted prefill/decode steps."""
+    """Greedy batched generation with jitted prefill + fused decode.
+
+    decode_impl: "fused" (default — one compiled fori_loop per generate)
+    or "loop" (per-token Python loop with a host round-trip per step; the
+    reference implementation).  prompt_bucket: padded prompt lengths are
+    rounded up to this multiple to bound prefill retraces.
+    """
 
     def __init__(self, bundle: ModelBundle, params, max_batch: int,
-                 max_seq_len: int, pad_id: int = 0):
+                 max_seq_len: int, pad_id: int = 0,
+                 decode_impl: str = "fused", prompt_bucket: int = 16):
+        if decode_impl not in ("fused", "loop"):
+            raise ValueError(f"decode_impl must be 'fused' or 'loop', "
+                             f"got {decode_impl!r}")
+        if prompt_bucket < 1:
+            raise ValueError(f"prompt_bucket must be >= 1, "
+                             f"got {prompt_bucket}")
         self.bundle = bundle
         self.params = params
         self.max_batch = max_batch
         self.max_seq_len = max_seq_len
         self.pad_id = pad_id
+        self.decode_impl = decode_impl
+        self.prompt_bucket = prompt_bucket
 
         self._prefill = jax.jit(
-            lambda p, toks, cache: bundle.prefill(p, toks, cache))
+            lambda p, toks, cache, mask: bundle.prefill(p, toks, cache,
+                                                        attn_mask=mask))
         self._decode = jax.jit(
-            lambda p, tok, cache, pos: bundle.decode_step(p, tok, cache,
-                                                          pos))
+            lambda p, tok, cache, pos, mask: bundle.decode_step(
+                p, tok, cache, pos, attn_mask=mask))
+        self._fused_decode = jax.jit(self._fused_decode_fn,
+                                     static_argnums=(5,))
+        # One zeroed cache tree per batch size, reused across generate
+        # calls: prefill/decode are functional (no donation), so pool
+        # entries stay all-zero and a batch-arm sweep allocates each
+        # shape once.
+        self._cache_pool: Dict[int, object] = {}
 
-    def _pad_batch(self, prompts: List[np.ndarray]) -> Tuple[np.ndarray, int]:
+    # -- fused decode ------------------------------------------------------
+
+    def _fused_decode_fn(self, params, tok, cache, mask, start_pos, steps):
+        """One compiled computation for the whole decode phase.
+
+        tok: [B] greedy token from prefill; mask: [B, max_seq_len] pad
+        validity over global positions; start_pos: traced scalar (bucketed
+        prompt length — changing it does NOT retrace); steps: static.
+        Returns the [B, steps] token buffer (single device->host transfer
+        at the caller).
+        """
+        b = tok.shape[0]
+        out = jnp.zeros((b, steps), jnp.int32)
+
+        def body(i, carry):
+            tok, cache, out = carry
+            out = jax.lax.dynamic_update_slice(out, tok[:, None], (0, i))
+            logits, cache = self.bundle.decode_step(
+                params, tok, cache, start_pos + i, attn_mask=mask)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return tok, cache, out
+
+        _, _, out = jax.lax.fori_loop(0, steps, body, (tok, cache, out))
+        return out
+
+    # -- shape management --------------------------------------------------
+
+    def _bucket_len(self, n: int) -> int:
+        bkt = self.prompt_bucket
+        return ((n + bkt - 1) // bkt) * bkt
+
+    def _pad_batch(self, prompts: List[np.ndarray],
+                   ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Left-pad to the bucketed max length.
+        Returns (tokens [B, L], pad mask [B, L] (True = real), L)."""
         b = len(prompts)
-        maxlen = max(len(p) for p in prompts)
-        out = np.full((b, maxlen), self.pad_id, np.int32)
+        plen = self._bucket_len(max(len(p) for p in prompts))
+        out = np.full((b, plen), self.pad_id, np.int32)
+        mask = np.zeros((b, plen), bool)
         for i, p in enumerate(prompts):
-            out[i, maxlen - len(p):] = p       # left padding
-        return out, maxlen
+            out[i, plen - len(p):] = p       # left padding
+            mask[i, plen - len(p):] = True
+        return out, mask, plen
+
+    def _cache_for(self, batch: int):
+        cache = self._cache_pool.get(batch)
+        if cache is None:
+            cache = self.bundle.init_cache(batch, self.max_seq_len)
+            self._cache_pool[batch] = cache
+        return cache
+
+    @property
+    def compile_counts(self) -> Dict[str, int]:
+        """Jit-cache entry counts per engine entry point (plus the cache
+        pool size) — the retrace regression tests assert these stay flat
+        across repeated pulls at the same (batch, bucket)."""
+        return {"prefill": self._prefill._cache_size(),
+                "decode_loop": self._decode._cache_size(),
+                "decode_fused": self._fused_decode._cache_size(),
+                "cache_pool": len(self._cache_pool)}
+
+    # -- generation --------------------------------------------------------
+
+    def _validate(self, prompts: List[np.ndarray], max_new_tokens: int,
+                  ) -> None:
+        if not prompts:
+            raise ValueError("generate() needs at least one prompt")
+        if any(len(p) == 0 for p in prompts):
+            raise ValueError("generate() got an empty prompt")
+        if len(prompts) > self.max_batch:
+            raise ValueError(
+                f"batch of {len(prompts)} prompts exceeds max_batch="
+                f"{self.max_batch}")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        plen = self._bucket_len(max(len(p) for p in prompts))
+        if plen + max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"bucketed prompt length {plen} + max_new_tokens "
+                f"{max_new_tokens} exceeds max_seq_len={self.max_seq_len} "
+                f"(the KV cache would overrun)")
 
     def generate(self, prompts: List[np.ndarray], max_new_tokens: int,
                  ) -> Tuple[np.ndarray, EngineStats]:
         """Greedy-decode `max_new_tokens` for each prompt.
         Returns (tokens [B, max_new_tokens], stats)."""
-        assert len(prompts) <= self.max_batch
-        toks, prompt_len = self._pad_batch(prompts)
+        self._validate(prompts, max_new_tokens)
+        toks, mask, prompt_len = self._pad_batch(prompts)
         b = toks.shape[0]
-        cache = self.bundle.init_cache(b, self.max_seq_len)
+        cache = self._cache_for(b)
 
         t0 = time.monotonic()
-        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks), cache,
+                                      jnp.asarray(mask))
         logits.block_until_ready()
         t_prefill = time.monotonic() - t0
 
-        out = np.zeros((b, max_new_tokens), np.int32)
+        # Decode-time pad mask over global positions: prompt pads stay
+        # invalid, every decode-written slot (>= prompt_len) is valid.
+        dec_mask = np.ones((b, self.max_seq_len), bool)
+        dec_mask[:, :prompt_len] = mask
+
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         t0 = time.monotonic()
-        for i in range(max_new_tokens):
-            out[:, i] = np.asarray(tok)
-            logits, cache = self._decode(self.params, tok, cache,
-                                         jnp.asarray(prompt_len + i,
-                                                     jnp.int32))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        tok.block_until_ready()
+        if self.decode_impl == "fused":
+            out_dev = self._fused_decode(
+                self.params, tok, cache, jnp.asarray(dec_mask),
+                jnp.asarray(prompt_len, jnp.int32), max_new_tokens)
+            out = np.asarray(out_dev)       # the one host sync
+        else:
+            dmask = jnp.asarray(dec_mask)
+            out = np.zeros((b, max_new_tokens), np.int32)
+            for i in range(max_new_tokens):
+                out[:, i] = np.asarray(tok)
+                logits, cache = self._decode(self.params, tok, cache,
+                                             jnp.asarray(prompt_len + i,
+                                                         jnp.int32), dmask)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok.block_until_ready()
         t_decode = time.monotonic() - t0
 
+        st = EngineStats(prefill_s=t_prefill, decode_s=t_decode,
+                         tokens_out=b * max_new_tokens,
+                         decode_impl=self.decode_impl)
         if obslog.active():
             obslog.emit("engine.prefill", dur_s=t_prefill, batch=b,
                         prompt_len=prompt_len)
             obslog.emit("engine.decode", dur_s=t_decode, batch=b,
-                        tokens=b * max_new_tokens,
-                        tokens_per_s=b * max_new_tokens / t_decode
-                        if t_decode > 0 else None)
-        return out, EngineStats(prefill_s=t_prefill, decode_s=t_decode,
-                                tokens_out=b * max_new_tokens)
+                        tokens=st.tokens_out,
+                        decode_impl=self.decode_impl,
+                        tokens_per_s=st.tokens_per_s or None)
+        return out, st
 
 
 class EngineEnvironment(BaseEnvironment):
@@ -159,7 +298,9 @@ class EngineEnvironment(BaseEnvironment):
         t_batch = st.total_s * factor
         p = self.board.power(level, util) if m is None else m.avg_watts
         metadata = {"backend": "engine", "prefill_s": st.prefill_s,
-                    "decode_s": st.decode_s}
+                    "decode_s": st.decode_s,
+                    "decode_impl": st.decode_impl,
+                    "tokens_per_s": st.tokens_per_s}
         if m is not None:
             metadata.update(sensor=m.sensor_name,
                             sensor_joules=m.joules,

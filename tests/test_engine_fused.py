@@ -1,0 +1,167 @@
+"""Engine hot path: fused fori_loop decode vs the per-token reference,
+left-pad masking, prompt bucketing, input validation, and the retrace /
+cache-reuse bounds a controller sweep relies on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models.registry import bundle_for
+from repro.platform import make_env
+from repro.serving.engine import InferenceEngine
+
+# One representative per model family (dense/GQA transformer, RWKV
+# recurrence, mixed recurrent/attention, softcap+sliding-window, MoE).
+FAMILIES = ["smollm-360m", "rwkv6-3b", "recurrentgemma-9b",
+            "gemma2-27b", "mixtral-8x22b"]
+
+
+def _engine(name, **kw):
+    cfg = C.get_smoke(name)
+    b = bundle_for(cfg)
+    params = b.init_params(jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 8)
+    kw.setdefault("max_seq_len", 48)
+    return InferenceEngine(b, params, **kw), cfg
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).astype(np.int32)
+            for n in lengths]
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_fused_bit_identical_to_loop(name):
+    """The fused fori_loop decode must produce exactly the greedy tokens
+    of the per-token reference loop on every model family."""
+    eng, cfg = _engine(name, decode_impl="fused")
+    ref = InferenceEngine(eng.bundle, eng.params, max_batch=8,
+                          max_seq_len=48, decode_impl="loop")
+    prompts = _prompts(cfg, [5, 9, 7])
+    out_f, st_f = eng.generate(prompts, max_new_tokens=8)
+    out_l, st_l = ref.generate(prompts, max_new_tokens=8)
+    np.testing.assert_array_equal(out_f, out_l)
+    assert st_f.decode_impl == "fused" and st_l.decode_impl == "loop"
+    assert out_f.shape == (3, 8)
+
+
+def test_generate_validation_errors():
+    eng, cfg = _engine("smollm-360m", max_batch=2, max_seq_len=48)
+    good = _prompts(cfg, [4])
+    with pytest.raises(ValueError, match="at least one prompt"):
+        eng.generate([], max_new_tokens=4)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate([np.zeros(0, np.int32)], max_new_tokens=4)
+    with pytest.raises(ValueError, match="exceeds max_batch"):
+        eng.generate(_prompts(cfg, [4, 4, 4]), max_new_tokens=4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.generate(good, max_new_tokens=0)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        # bucketed to 16, 16 + 40 > 48
+        eng.generate(good, max_new_tokens=40)
+    with pytest.raises(ValueError, match="decode_impl"):
+        InferenceEngine(eng.bundle, eng.params, max_batch=2,
+                        max_seq_len=48, decode_impl="eager")
+    with pytest.raises(ValueError, match="prompt_bucket"):
+        InferenceEngine(eng.bundle, eng.params, max_batch=2,
+                        max_seq_len=48, prompt_bucket=0)
+
+
+def test_ragged_batch_matches_unpadded_logits():
+    """Left-padding + the threaded attn_mask must reproduce the unpadded
+    per-sequence logits exactly (fp32): prefill the ragged pair padded to
+    a common length, compare each row against its solo unpadded run."""
+    for attn_impl in ("naive", "flash"):
+        cfg = dataclasses.replace(C.get_smoke("smollm-360m"),
+                                  dtype=jnp.float32, attn_impl=attn_impl)
+        b = bundle_for(cfg)
+        params = b.init_params(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        p_short = rng.integers(1, cfg.vocab_size, 5).astype(np.int32)
+        p_long = rng.integers(1, cfg.vocab_size, 9).astype(np.int32)
+
+        plen = 9
+        toks = np.zeros((2, plen), np.int32)
+        mask = np.zeros((2, plen), bool)
+        toks[0, plen - 5:] = p_short
+        mask[0, plen - 5:] = True
+        toks[1, :] = p_long
+        mask[1, :] = True
+        cache = b.init_cache(2, 32)
+        ragged, cache = b.prefill(params, jnp.asarray(toks), cache,
+                                  attn_mask=jnp.asarray(mask))
+
+        solo_cache = b.init_cache(1, 32)
+        solo, solo_cache = b.prefill(params, jnp.asarray(p_short[None]),
+                                     solo_cache)
+        np.testing.assert_allclose(np.asarray(ragged[0]),
+                                   np.asarray(solo[0]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"prefill {attn_impl}")
+
+        # one decode step must agree too (the padded row decodes at a
+        # shifted position; RoPE depends only on relative offsets)
+        nxt = jnp.asarray([int(np.argmax(solo[0]))], jnp.int32)
+        dmask = np.ones((2, 32), bool)
+        dmask[:, :plen] = mask
+        lr, _ = b.decode_step(params, jnp.concatenate([nxt, nxt]), cache,
+                              jnp.asarray(plen, jnp.int32),
+                              attn_mask=jnp.asarray(dmask))
+        ls, _ = b.decode_step(params, nxt, solo_cache,
+                              jnp.asarray(5, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lr[0]), np.asarray(ls[0]),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"decode {attn_impl}")
+
+
+def test_prompt_bucketing_preserves_tokens():
+    """Rounding the padded prompt length up to a bucket multiple shifts
+    every sequence left-ward by the same pad amount; greedy tokens must
+    not change between bucket sizes (fp32 — RoPE shift-invariance is
+    exact in math, and bf16 rounding would flip near-tie argmaxes)."""
+    cfg = dataclasses.replace(C.get_smoke("smollm-360m"),
+                              dtype=jnp.float32)
+    b = bundle_for(cfg)
+    params = b.init_params(jax.random.PRNGKey(0))
+    eng1 = InferenceEngine(b, params, max_batch=8, max_seq_len=48,
+                           prompt_bucket=1)
+    eng16 = InferenceEngine(b, params, max_batch=8, max_seq_len=48,
+                            prompt_bucket=16)
+    prompts = _prompts(cfg, [5, 9], seed=2)
+    out1, _ = eng1.generate(prompts, max_new_tokens=6)
+    out16, _ = eng16.generate(prompts, max_new_tokens=6)
+    np.testing.assert_array_equal(out1, out16)
+
+
+def test_sweep_compiles_once_per_shape():
+    """A 10-round controller-style sweep over batch arms must compile the
+    prefill and fused decode once per (batch, bucket) on first touch and
+    never again: `compile_counts` stays flat and distinct batch arms hit
+    distinct cache-pool entries."""
+    env = make_env("engine/smollm-360m", seed=0, prompt_len=16,
+                   max_new_tokens=8, max_batch=8, max_seq_len=64)
+    batches = [4, 8]
+    for b in batches:
+        env.pull({"freq_mhz": 930.75, "batch": b}, 0)
+    baseline = dict(env.engine.compile_counts)
+    assert baseline["cache_pool"] == len(batches)
+    assert baseline["prefill"] == len(batches)
+    assert baseline["decode_fused"] == len(batches)
+    assert baseline["decode_loop"] == 0
+    for rnd in range(1, 10):
+        env.pull({"freq_mhz": 930.75, "batch": batches[rnd % 2]}, rnd)
+        assert env.engine.compile_counts == baseline, \
+            f"retrace at round {rnd}: {env.engine.compile_counts}"
+
+
+def test_engine_env_reports_throughput():
+    env = make_env("engine/smollm-360m", seed=0, prompt_len=16,
+                   max_new_tokens=8, max_batch=8, max_seq_len=64)
+    obs = env.pull({"freq_mhz": 930.75, "batch": 4}, 0)
+    assert obs.metadata["decode_impl"] == "fused"
+    assert obs.metadata["tokens_per_s"] > 0

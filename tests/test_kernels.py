@@ -94,6 +94,37 @@ class TestDecodeAttention:
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=2e-5, atol=2e-5)
 
+    @settings(max_examples=8, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        kvh=st.sampled_from([1, 2]),
+        s=st.sampled_from([128, 256]),
+        start_frac=st.floats(0.0, 0.6),
+        len_frac=st.floats(0.65, 1.0),
+    )
+    def test_per_batch_window_sweep(self, b, kvh, s, start_frac, len_frac):
+        """Left-padded serving: per-batch [kv_start, kv_len) windows via
+        the scalar-prefetch operands must match the masked oracle."""
+        h, d = kvh * 2, 64
+        key = jax.random.PRNGKey(int(s * len_frac) + b)
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kvh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kvh, d), jnp.float32)
+        rng = np.random.default_rng(b * 31 + s)
+        ends = rng.integers(int(s * 0.6), int(s * len_frac) + 1,
+                            size=b).astype(np.int32)
+        starts = np.minimum(
+            rng.integers(0, max(1, int(s * start_frac) + 1), size=b),
+            ends - 1).astype(np.int32)
+        out = decode_attention(q, k, v, jnp.asarray(ends),
+                               jnp.asarray(starts), block_kv=64,
+                               interpret=True)
+        ref = decode_attention_ref(q, k, v, jnp.asarray(ends),
+                                   jnp.asarray(starts))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
 
 class TestWKV6:
     @settings(max_examples=6, deadline=None)

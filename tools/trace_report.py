@@ -71,7 +71,8 @@ def arm_table(rows: List[dict]) -> List[str]:
             r.get("attrs", {}))
     header = (f"{'':2}{'arm':>4} {'knobs':<28}{'pulls':>6}"
               f"{'mean_E_J':>10}{'mean_L_s':>10}{'mean_EDP':>10}"
-              f"{'mean_cost':>10}{'mean_W':>10}{'mean_stale':>11}")
+              f"{'mean_cost':>10}{'mean_W':>10}{'mean_tok/s':>11}"
+              f"{'mean_stale':>11}")
     lines = [f"per-arm summary ({len(pulls)} pulls, "
              f"{len(by_arm)} distinct arms; * = committed):", header]
     stats = []
@@ -85,6 +86,7 @@ def arm_table(rows: List[dict]) -> List[str]:
             "edp": _mean([a.get("edp") for a in attrs]),
             "cost": _mean([a.get("cost") for a in attrs]),
             "power": _mean([a.get("power_w") for a in attrs]),
+            "tok_s": _mean([a.get("tokens_per_s") for a in attrs]),
             "stale": _mean([a.get("staleness") for a in attrs]),
         })
     stats.sort(key=lambda s: (s["cost"] is None, s["cost"], s["arm"]))
@@ -93,7 +95,8 @@ def arm_table(rows: List[dict]) -> List[str]:
         lines.append(
             f"{mark}{s['arm']:>4} {s['knobs']:<28}{s['pulls']:>6}"
             f"{_fmt(s['energy'])}{_fmt(s['latency'])}{_fmt(s['edp'])}"
-            f"{_fmt(s['cost'])}{_fmt(s['power'])}{_fmt(s['stale'], 11)}")
+            f"{_fmt(s['cost'])}{_fmt(s['power'])}{_fmt(s['tok_s'], 11)}"
+            f"{_fmt(s['stale'], 11)}")
     if committed is not None:
         knobs = _knobs_str(commits[-1].get("attrs", {}).get("knobs"))
         lines.append(f"committed: arm {committed} ({knobs})")
