@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
     E12 engine_throughput  decode tokens/s and per-token latency vs
                       batch, fused fori_loop vs per-token loop (writes
                       BENCH_engine.json)
+    E13 engine_continuous  continuous vs static batching goodput under
+                      Poisson arrivals with ragged output lengths, plus
+                      EOS early-exit (writes BENCH_continuous.json)
 """
 
 from __future__ import annotations
@@ -29,9 +32,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (ablations, config_search, engine_throughput,
-                            fleet_scaling, kernels, landscape, roofline,
-                            sensitivity, tpu_serving, validation)
+    from benchmarks import (ablations, config_search, engine_continuous,
+                            engine_throughput, fleet_scaling, kernels,
+                            landscape, roofline, sensitivity, tpu_serving,
+                            validation)
 
     modules = [
         ("E1_landscape", landscape),
@@ -44,6 +48,7 @@ def main() -> None:
         ("E9_ablations", ablations),
         ("E10_E11_fleet_scaling", fleet_scaling),
         ("E12_engine_throughput", engine_throughput),
+        ("E13_engine_continuous", engine_continuous),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("filters", nargs="*",

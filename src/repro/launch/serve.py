@@ -144,16 +144,21 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
 
 def engine_mode(arch: str, rounds: int, alpha: float, seed: int,
                 sensor: str = "simulated",
-                decode_impl: str = "fused") -> dict:
+                decode_impl: str = "fused",
+                scheduler: str = "static") -> dict:
     """`sensor` selects the per-pull power source (`repro.obs.make_sensor`
     spec): every engine pull is metered through it.  The default
     "simulated" sensor reads the same analytical board model the
     unmetered path evaluates, bit-identically.  `decode_impl` picks the
     engine's decode path: "fused" (jitted fori_loop, one host sync per
-    generate) or "loop" (per-token reference)."""
+    generate) or "loop" (per-token reference).  `scheduler` picks the
+    serving discipline per pull: "static" (one fixed batch) or
+    "continuous" (slot-level admission over Poisson arrivals with
+    ragged output lengths — the batch arm becomes max concurrency)."""
     name = f"engine/{arch}"
     env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8,
-                   sensor=sensor, decode_impl=decode_impl)
+                   sensor=sensor, decode_impl=decode_impl,
+                   scheduler=scheduler)
     space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e0, l0 = env.pull(space.values(space.corner()), 0)
@@ -299,6 +304,10 @@ def main() -> None:
                     help="async-fleet: device 0 returns results this many "
                          "times slower (telemetry unchanged; 1.0 = "
                          "homogeneous)")
+    ap.add_argument("--scheduler", default="static",
+                    choices=["static", "continuous"],
+                    help="engine mode serving discipline: static batches "
+                         "or continuous (slot-level) batching")
     ap.add_argument("--decode-impl", default="fused",
                     choices=["fused", "loop"],
                     help="engine mode decode path: fused (jitted "
@@ -331,7 +340,8 @@ def main() -> None:
         if args.mode == "engine":
             return engine_mode(args.arch, args.rounds, args.alpha,
                                args.seed, sensor=args.sensor,
-                               decode_impl=args.decode_impl)
+                               decode_impl=args.decode_impl,
+                               scheduler=args.scheduler)
         if args.mode == "fleet":
             return fleet_mode(args.model, args.rounds, args.alpha,
                               args.seed, args.fleet_size, k=args.k,

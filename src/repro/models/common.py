@@ -381,16 +381,31 @@ def cached_attention(params: Params, spec: AttnSpec, x: Array,
 def prefill_into_cache(params: Params, spec: AttnSpec, x: Array,
                        cache: Params, ring: bool = False,
                        pad_mask: Optional[Array] = None,
+                       pos_offset: Optional[Array] = None,
                        ) -> Tuple[Array, Params]:
     """Prefill: write S prompt tokens into the cache, return attn output.
     For ring caches only the last `window` tokens are retained.
     `pad_mask` ([B, S] bool, True = real token) masks left-pad slots out
-    of the keys so ragged batches match their unpadded logits."""
+    of the keys so ragged batches match their unpadded logits.
+
+    `pos_offset` (traced scalar) shifts the whole prompt to global
+    positions ``[pos_offset, pos_offset + S)``: RoPE rotates at the global
+    positions (so later scalar-position decode steps stay consistent) and
+    cache writes land at the offset.  This is the continuous-batching
+    admission path — a request joining a running batch at global clock C
+    prefills at ``pos_offset = C - S``.  For a ring cache with S < window
+    the caller must pass a fresh (all-zero) cache row: the prompt is
+    written at 0 and the buffer rolled so token i lands in ring slot
+    ``(pos_offset + i) % window``.  ``None`` (the default) keeps the
+    original position-0 semantics bit-for-bit."""
     b, s, _ = x.shape
     s_cache = cache["k"].shape[1]
     quantized = "k_scale" in cache
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if pos_offset is not None:
+        positions = positions + pos_offset
     q, k, v = _project_qkv(params, spec, x, positions)
+    off = jnp.asarray(0 if pos_offset is None else pos_offset, jnp.int32)
 
     def write(kk, vv, offset=0):
         if quantized:
@@ -414,8 +429,11 @@ def prefill_into_cache(params: Params, spec: AttnSpec, x: Array,
         }
 
     if ring and s >= s_cache:
+        # Keep the last `window` tokens; token at global position g lives
+        # in ring slot g % window, so the kept block starts at slot
+        # (off + s - w) % w (off = 0 reproduces the original layout).
         w = s_cache
-        start = (s - w) % w
+        start = (off + s - w) % w
         rolled_k = jnp.roll(k[:, s - w:], shift=start, axis=1)
         rolled_v = jnp.roll(v[:, s - w:], shift=start, axis=1)
         if quantized:
@@ -425,8 +443,16 @@ def prefill_into_cache(params: Params, spec: AttnSpec, x: Array,
         else:
             new_cache = {"k": rolled_k.astype(cache["k"].dtype),
                          "v": rolled_v.astype(cache["v"].dtype)}
+    elif ring and pos_offset is not None:
+        # Short prompt into a ring cache at an offset: write at 0 into the
+        # (fresh, all-zero) row, then roll so token i sits in slot
+        # (off + i) % w.  A dirty row would smear old entries around the
+        # ring — the admission path always scatters a fresh row.
+        base = write(k, v)
+        new_cache = {name: jnp.roll(arr, off % s_cache, axis=1)
+                     for name, arr in base.items()}
     else:
-        new_cache = write(k, v)
+        new_cache = write(k, v, off)
     if spec.attn_impl == "flash":
         from repro.models import flash
         ctx = flash.flash_attention(q, k, v, spec, causal=True,

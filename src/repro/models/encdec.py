@@ -235,12 +235,20 @@ def init_cache(cfg: EncDecConfig, batch: int, max_len: int) -> Params:
 
 def prefill(cfg: EncDecConfig, params: Params, inputs, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Params]:
     """Encode speech + start decoding with a BOS token (tokens[:, :1]).
     `attn_mask` is accepted for engine API uniformity but unused: the
     target side starts from a single BOS token (no ragged prompt), and
-    cross attention already masks by `memory_len`."""
+    cross attention already masks by `memory_len`.  `pos_offset` is
+    rejected: sinusoidal positions are absolute, so continuous-batching
+    admission at a global clock offset would change the encoding (the
+    engine's slot scheduler excludes this family)."""
     del attn_mask
+    if pos_offset is not None:
+        raise NotImplementedError(
+            "encdec uses absolute sinusoidal positions; prefill at a "
+            "pos_offset (continuous-batching admission) is unsupported")
     if isinstance(inputs, dict):
         speech = inputs["speech_embeddings"]
         tokens = inputs["tokens"]

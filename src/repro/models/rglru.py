@@ -265,9 +265,15 @@ def _norm_at(scales: Params, i: int, x: Array) -> Array:
 
 
 def _run(cfg: RGLRUConfig, params: Params, x: Array, cache: Params,
-         pos: Optional[Array], mode: str) -> Tuple[Array, Params]:
+         pos: Optional[Array], mode: str,
+         pad_mask: Optional[Array] = None,
+         pos_offset: Optional[Array] = None) -> Tuple[Array, Params]:
     """mode: 'train' (scan recurrence, full attn masks, no cache IO),
     'prefill' (scan recurrence + cache writes), 'decode' (single step).
+
+    `pad_mask` / `pos_offset` reach only the *attention* blocks (left-pad
+    key masking and continuous-batching admission offsets); the recurrent
+    blocks are position-free and fold every input token regardless.
 
     Layer structure is unrolled in Python over the (short, <=40) block list;
     each block's params are indexed out of the stacked arrays.  XLA still
@@ -304,11 +310,14 @@ def _run(cfg: RGLRUConfig, params: Params, x: Array, cache: Params,
             elif mode == "prefill":
                 ring = c["k"].shape[1] == cfg.sliding_window
                 out, nc = common.prefill_into_cache(bp["attn"], spec, h_in,
-                                                    c, ring=ring)
+                                                    c, ring=ring,
+                                                    pad_mask=pad_mask,
+                                                    pos_offset=pos_offset)
             else:
                 ring = c["k"].shape[1] == cfg.sliding_window
                 out, nc = common.cached_attention(bp["attn"], spec, h_in,
-                                                  c, pos, ring=ring)
+                                                  c, pos, ring=ring,
+                                                  pad_mask=pad_mask)
             new_k.append(nc["k"])
             new_v.append(nc["v"])
             ai += 1
@@ -352,16 +361,19 @@ def loss_fn(cfg: RGLRUConfig, params: Params, batch: Dict[str, Array],
 
 def prefill(cfg: RGLRUConfig, params: Params, tokens: Array, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
-    # attn_mask accepted for engine API uniformity but unused: the RG-LRU
-    # recurrent blocks fold every input token into their state, so masking
-    # only the attention blocks cannot make left-padded batches match
-    # their unpadded logits (same noted boundary as rwkv6).
-    del attn_mask
+            attn_mask: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Params]:
+    # attn_mask masks left-pad slots out of the *attention* block keys
+    # (and pos_offset places them at global positions for continuous-
+    # batching admission); the RG-LRU recurrent blocks still fold every
+    # input token into their state, so left-padded batches cannot fully
+    # match their unpadded logits (same noted boundary as rwkv6 — the
+    # mask narrows the gap to the recurrent blocks only).
     x = common.embed(params, tokens, scale_by_sqrt_dim=True)
     if prefix_embeddings is not None:
         x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)
-    x, cache = _run(cfg, params, x, cache, None, "prefill")
+    x, cache = _run(cfg, params, x, cache, None, "prefill",
+                    pad_mask=attn_mask, pos_offset=pos_offset)
     x = common.rmsnorm(params["final_norm"], x[:, -1:])
     logits = common.unembed(params, x, cfg.tie_embeddings)
     return logits[:, 0], cache
@@ -370,9 +382,11 @@ def prefill(cfg: RGLRUConfig, params: Params, tokens: Array, cache: Params,
 def decode_step(cfg: RGLRUConfig, params: Params, token: Array,
                 cache: Params, pos: Array,
                 attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
-    del attn_mask  # see prefill: recurrence makes left-pad unmaskable
+    # attn_mask reaches the attention blocks (see prefill); the recurrent
+    # blocks remain unmasked by construction.
     x = common.embed(params, token[:, None], scale_by_sqrt_dim=True)
-    x, cache = _run(cfg, params, x, cache, pos, "decode")
+    x, cache = _run(cfg, params, x, cache, pos, "decode",
+                    pad_mask=attn_mask)
     x = common.rmsnorm(params["final_norm"], x)
     logits = common.unembed(params, x, cfg.tie_embeddings)
     return logits[:, 0], cache

@@ -365,13 +365,17 @@ def loss_fn(cfg: RWKV6Config, params: Params, batch: Dict[str, Array],
 
 def prefill(cfg: RWKV6Config, params: Params, tokens: Array, cache: Params,
             prefix_embeddings: Optional[Array] = None,
-            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Params]:
     # attn_mask is accepted for engine API uniformity but unused: the
     # recurrence folds every input token into the state, so left-pad
     # tokens perturb it regardless of any attention-style mask (a
     # recurrent engine should right-align or per-sequence-reset instead
     # — noted boundary, same as the pre-mask transformer behavior).
-    del attn_mask
+    # pos_offset is likewise ignored: the state is position-free, so a
+    # continuous-batching admission at any global clock is just a fresh
+    # state prefill (the engine scatters the state row into its slot).
+    del attn_mask, pos_offset
     x = common.embed(params, tokens)
     if prefix_embeddings is not None:
         x = jnp.concatenate([prefix_embeddings.astype(x.dtype), x], axis=1)

@@ -406,11 +406,16 @@ def _interleave(cfg: TransformerConfig, params: Params, x: Array,
 
 def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
             cache: Params, prefix_embeddings: Optional[Array] = None,
-            attn_mask: Optional[Array] = None) -> Tuple[Array, Params]:
+            attn_mask: Optional[Array] = None,
+            pos_offset: Optional[Array] = None) -> Tuple[Array, Params]:
     """Run the prompt through the model, filling the cache.
     `attn_mask` ([B, S] bool, True = real token) masks left-padded slots
     out of every layer's keys (ragged batched prefill); prefix embedding
     slots are always valid.
+    `pos_offset` (traced scalar, continuous-batching admission) shifts
+    the prompt to global positions ``[pos_offset, pos_offset + S)`` in
+    both RoPE and the cache writes — see
+    `common.prefill_into_cache`.
     Returns (logits for the last position [B, V], cache)."""
     _, norm = common.make_norm(cfg.norm)
     spec = cfg.attn_spec()
@@ -430,7 +435,7 @@ def prefill(cfg: TransformerConfig, params: Params, tokens: Array,
         a, nc = common.prefill_into_cache(
             lp["attn"], lspec, h, c,
             ring=is_local and c["k"].shape[1] == cfg.sliding_window,
-            pad_mask=attn_mask)
+            pad_mask=attn_mask, pos_offset=pos_offset)
         if cfg.post_norms:
             a = norm(lp["post_norm_attn"], a)
         x = x + a

@@ -89,6 +89,13 @@ class ObsSession:
                           ("histogram", "engine_decode_s", "dur_s"),
                           ("histogram", "engine.tokens_per_s",
                            "tokens_per_s")],
+        "engine.request": [("counter", "engine_requests_total", None),
+                           ("histogram", "engine_request_latency_s",
+                            "dur_s"),
+                           ("histogram", "engine_queue_wait_s",
+                            "queue_wait_s"),
+                           ("histogram", "engine_request_tokens",
+                            "tokens")],
         "sensor.run": [("gauge", "sensor_joules", "joules"),
                        ("gauge", "sensor_avg_w", "avg_watts"),
                        ("gauge", "sensor_peak_w", "peak_watts")],

@@ -317,7 +317,9 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                  max_seq_len: int = 128, prompt_len: int = 16,
                  max_new_tokens: int = 8, arrival_rate: float = 1.0,
                  sensor=None, sample_hz: float = 20.0,
-                 decode_impl: str = "fused", prompt_bucket: int = 16):
+                 decode_impl: str = "fused", prompt_bucket: int = 16,
+                 scheduler: str = "static",
+                 requests_per_pull=None, eos_id=None, chunk: int = 16):
     import jax
     import repro.configs as configs_mod
     from repro.models.registry import bundle_for
@@ -340,4 +342,7 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                              arrival_rate=arrival_rate,
                              prompt_len=prompt_len,
                              max_new_tokens=max_new_tokens, seed=seed,
-                             sensor=sensor, sample_hz=sample_hz)
+                             sensor=sensor, sample_hz=sample_hz,
+                             scheduler=scheduler,
+                             requests_per_pull=requests_per_pull,
+                             eos_id=eos_id, chunk=chunk)

@@ -3,4 +3,5 @@ JAX inference engine.  Environments implement the `repro.platform` contract
 (`pull` -> Observation) and are constructible by name via
 `repro.platform.make_env`."""
 
-from repro.serving import energy, queueing, requests, simulator  # noqa: F401
+from repro.serving import (energy, queueing, requests,  # noqa: F401
+                           scheduler, simulator)

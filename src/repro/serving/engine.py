@@ -31,13 +31,36 @@ is threaded through the models' attention (``attn_mask``) so padded
 slots are masked rather than attended — ragged and unpadded prompts
 produce identical per-sequence logits on attention models (recurrent
 families accept and ignore the mask; see their module docstrings).
+
+Continuous batching (``generate_continuous``) reworks the decode phase
+around a persistent slot pool sharing one global KV clock:
+
+* **while_loop decode with EOS early-exit** — the fused loop becomes a
+  ``lax.while_loop`` carrying per-slot ``(finished, emitted)`` state; it
+  stops as soon as every slot is done (EOS or per-request length cap) or
+  a slot frees up while admissible requests are pending, so short
+  requests stop paying for long co-residents.
+* **slot-level admission without retraces** — all live slots decode at
+  the same scalar clock ``pos``; a slot's valid KV region is the
+  contiguous suffix ``[kv_start, pos)`` of its cache row, expressed via
+  the per-row ``attn_mask`` (and therefore via the Pallas decode
+  kernel's per-batch ``[kv_start, kv_len)`` windows).  Admitting a
+  request is a single-row prefill at ``pos_offset = pos - Lb`` scattered
+  into the freed slot (`dynamic_update_slice_in_dim`) plus a mask-row
+  update — slot and offset are traced scalars, so slot churn never
+  retraces (one trace per prompt bucket).
+* **host-side scheduling** — `serving.scheduler.SlotScheduler` owns the
+  occupancy/admission/accounting state machine (property-tested in
+  isolation); the engine owns the arrays.  The loop runs in chunks of
+  ``chunk`` steps: one host sync per chunk to harvest finished slots and
+  admit from the `RequestQueue`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +70,10 @@ from repro.models.registry import ModelBundle
 from repro.obs import EnergyMeter, make_sensor
 from repro.obs import tracing as obslog
 from repro.platform import BaseEnvironment, DVFSPlatform, Observation, observe
+from repro.serving.requests import ArrivalProcess
+from repro.serving.scheduler import (EngineRequest, RequestQueue,
+                                     RequestRecord, SlotScheduler,
+                                     attribute_energy)
 
 
 @dataclasses.dataclass
@@ -64,6 +91,29 @@ class EngineStats:
     def tokens_per_s(self) -> float:
         """Decode throughput (generated tokens / decode wall-clock)."""
         return self.tokens_out / self.decode_s if self.decode_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class ContinuousStats(EngineStats):
+    """Run-level stats for `generate_continuous`.
+
+    `sim_s` is the simulation-clock duration of the run (wall time scaled
+    by `time_scale`, or `step_time_s` units in deterministic mode) —
+    goodput is `n_requests / sim_s`.  `records` carries the per-request
+    accounting (admit/finish times, queue wait, tokens, joules)."""
+
+    sim_s: float = 0.0
+    decode_steps: int = 0
+    prefill_calls: int = 0
+    n_requests: int = 0
+    mean_occupancy: float = 0.0
+    mean_queue_wait_s: float = 0.0
+    records: List[RequestRecord] = dataclasses.field(default_factory=list)
+
+    @property
+    def goodput_rps(self) -> float:
+        """Completed requests per simulated second."""
+        return self.n_requests / self.sim_s if self.sim_s > 0 else 0.0
 
 
 class InferenceEngine:
@@ -100,6 +150,9 @@ class InferenceEngine:
                 p, tok, cache, pos, attn_mask=mask))
         self._fused_decode = jax.jit(self._fused_decode_fn,
                                      static_argnums=(5,))
+        self._fused_continuous = jax.jit(self._fused_continuous_fn,
+                                         static_argnums=(10,))
+        self._admit = jax.jit(self._admit_fn)
         # One zeroed cache tree per batch size, reused across generate
         # calls: prefill/decode are functional (no donation), so pool
         # entries stay all-zero and a batch-arm sweep allocates each
@@ -130,6 +183,88 @@ class InferenceEngine:
 
         _, _, out = jax.lax.fori_loop(0, steps, body, (tok, cache, out))
         return out
+
+    # -- continuous decode -------------------------------------------------
+
+    def _fused_continuous_fn(self, params, tok, cache, mask, start_pos,
+                             finished, remaining, eos_id, steps_cap,
+                             pending, chunk):
+        """One compiled while_loop over up to `chunk` slot-pool decode steps.
+
+        Per-slot carry: `finished` [B] bool (vacant or done slots decode
+        but their tokens are masked to -1 and not counted), `emitted` [B]
+        int32 (tokens credited this call).  A slot finishes when its
+        pre-decode token is `eos_id` (disabled when eos_id < 0) or when
+        `emitted` reaches `remaining` (per-slot budget).  The loop exits
+        early when every slot is finished, or when any slot is finished
+        while `pending > 0` admissible requests wait (so the host can
+        refill the slot instead of idling it).  All of steps_cap /
+        pending / start_pos / eos_id are traced scalars — only `chunk`
+        (the buffer width) is static, so occupancy churn never retraces.
+
+        With no EOS hits and no vacancies this body performs exactly the
+        ops of `_fused_decode_fn`'s fori body in the same order — the
+        differential identity test pins that bit-for-bit.
+        """
+        b = tok.shape[0]
+        out0 = jnp.full((b, chunk), -1, jnp.int32)
+        emitted0 = jnp.zeros((b,), jnp.int32)
+
+        def cond(carry):
+            i, _tok, _cache, _out, fin, _em = carry
+            refill = jnp.any(fin) & (pending > 0)
+            return (i < steps_cap) & ~jnp.all(fin) & ~refill
+
+        def body(carry):
+            i, tok, cache, out, fin, em = carry
+            write = jnp.where(fin, jnp.int32(-1), tok)
+            out = jax.lax.dynamic_update_slice(out, write[:, None], (0, i))
+            em = em + jnp.where(fin, 0, 1).astype(jnp.int32)
+            hit_eos = (eos_id >= 0) & (tok == eos_id) & ~fin
+            fin = fin | hit_eos | (em >= remaining)
+            logits, cache = self.bundle.decode_step(
+                params, tok, cache, start_pos + i, attn_mask=mask)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (i + 1, tok, cache, out, fin, em)
+
+        init = (jnp.asarray(0, jnp.int32), tok, cache, out0, finished,
+                emitted0)
+        steps, tok, cache, out, finished, emitted = jax.lax.while_loop(
+            cond, body, init)
+        return steps, tok, cache, out, finished, emitted
+
+    def _admit_fn(self, params, toks, mask, cache, slot, offset):
+        """Prefill one request at global offset and scatter it into `slot`.
+
+        toks/mask: [1, Lb] left-padded prompt; slot/offset: traced int32
+        scalars (no retrace across slots or clock values — one trace per
+        prompt bucket Lb).  A fresh zero cache row is prefilled at
+        positions [offset, offset + Lb) and written over the retired
+        tenant's row with `dynamic_update_slice_in_dim` — required for
+        ring (sliding-window) caches, whose admission path rolls a
+        zeroed row into ring order (see models/common.py).  Returns
+        (first greedy token scalar, updated pool cache).
+        """
+        row = self.bundle.init_cache(1, self.max_seq_len)
+        logits, row = self.bundle.prefill(params, toks, row,
+                                          attn_mask=mask, pos_offset=offset)
+
+        def scatter(pool_leaf, row_leaf):
+            # Batched leaves carry batch at axis 1 ([layers, B, ...]);
+            # anything else (scalar bookkeeping leaves) passes through.
+            if (getattr(pool_leaf, "ndim", 0) >= 2
+                    and getattr(row_leaf, "ndim", -1) == pool_leaf.ndim
+                    and row_leaf.shape[0] == pool_leaf.shape[0]
+                    and row_leaf.shape[1] == 1
+                    and row_leaf.shape[2:] == pool_leaf.shape[2:]):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    pool_leaf, row_leaf.astype(pool_leaf.dtype), slot,
+                    axis=1)
+            return pool_leaf
+
+        new_cache = jax.tree.map(scatter, cache, row)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        return tok, new_cache
 
     # -- shape management --------------------------------------------------
 
@@ -165,6 +300,8 @@ class InferenceEngine:
         return {"prefill": self._prefill._cache_size(),
                 "decode_loop": self._decode._cache_size(),
                 "decode_fused": self._fused_decode._cache_size(),
+                "decode_continuous": self._fused_continuous._cache_size(),
+                "admit": self._admit._cache_size(),
                 "cache_pool": len(self._cache_pool)}
 
     # -- generation --------------------------------------------------------
@@ -240,6 +377,222 @@ class InferenceEngine:
                         tokens_per_s=st.tokens_per_s or None)
         return out, st
 
+    # -- continuous generation ---------------------------------------------
+
+    def generate_continuous(self, requests: Iterable[EngineRequest], *,
+                            n_slots: Optional[int] = None,
+                            eos_id: Optional[int] = None,
+                            chunk: int = 16,
+                            step_time_s: Optional[float] = None,
+                            time_scale: float = 1.0,
+                            ) -> Tuple[Dict[int, np.ndarray], ContinuousStats]:
+        """Serve `requests` with continuous (slot-level) batching.
+
+        Decoding runs on a persistent pool of `n_slots` slots sharing one
+        global KV clock; a request that hits `eos_id` or its own
+        `max_new_tokens` retires mid-run and its slot is refilled from
+        the queue (admission = single-row prefill at the clock offset —
+        see `_admit_fn`).  When every slot drains the clock reseeds at
+        zero with a fresh left-padded batch, which also recovers the
+        arena near `max_seq_len`.
+
+        The simulation clock orders arrivals (`EngineRequest.arrival_s`)
+        against service: it advances by measured wall time × `time_scale`
+        (DVFS factor), or deterministically by `step_time_s` per decode
+        step / per prefill call when given (benchmarks assert on the
+        resulting model time, independent of host noise).
+
+        Returns ``({rid: tokens [n_i]}, ContinuousStats)`` — per-request
+        streams are ragged (EOS-terminated streams include the EOS
+        token).
+        """
+        reqs = list(requests)
+        if not reqs:
+            raise ValueError("generate_continuous() needs at least one "
+                             "request")
+        if len({r.rid for r in reqs}) != len(reqs):
+            raise ValueError("generate_continuous() got duplicate request "
+                             "ids")
+        if eos_id is not None and eos_id < 0:
+            raise ValueError(f"eos_id must be None or >= 0, got {eos_id}")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if self.bundle.family == "encdec":
+            raise ValueError(
+                "continuous batching is unsupported for the encdec family "
+                "(absolute sinusoidal positions forbid offset admission; "
+                "see models/encdec.py)")
+        b = n_slots if n_slots is not None else min(self.max_batch,
+                                                    len(reqs))
+        if not 1 <= b <= self.max_batch:
+            raise ValueError(f"n_slots={b} outside [1, max_batch="
+                             f"{self.max_batch}]")
+        sched = SlotScheduler(b, self.max_seq_len, self.prompt_bucket)
+        for r in reqs:
+            sched.validate_request(r)
+        queue = RequestQueue(reqs)
+        eos = jnp.asarray(-1 if eos_id is None else int(eos_id), jnp.int32)
+
+        sim = 0.0
+        prefill_s = decode_s = 0.0
+        decode_steps = 0
+        prefill_calls = 0
+        outputs: Dict[int, np.ndarray] = {}
+
+        def tick(wall_dt: float, units: int) -> None:
+            nonlocal sim
+            sim += (step_time_s * units if step_time_s is not None
+                    else wall_dt * time_scale)
+
+        # Per-slot device/host state between chunks.  Vacant slots carry
+        # finished=True, remaining=0 and an all-True mask row (an
+        # all-invalid attention window would produce NaN attention).
+        cache = None
+        tok = None
+        valid = np.ones((b, self.max_seq_len), bool)
+        finished = np.ones((b,), bool)
+        remaining = np.zeros((b,), np.int32)
+
+        while len(queue) or sched.any_live():
+            if not sched.any_live():
+                arrived = queue.arrived(sim)
+                if not arrived:
+                    sim = queue.next_arrival()   # idle: jump to next arrival
+                    continue
+                # Reseed: fresh left-padded batch at clock zero (same path
+                # as static generate — self._prefill at offset 0).
+                group = sched.seed_group(arrived)
+                plen = max(self._bucket_len(len(r.prompt)) for r in group)
+                toks = np.full((b, plen), self.pad_id, np.int32)
+                mask = np.zeros((b, plen), bool)
+                mask[len(group):, :] = True      # dummy rows: defined attn
+                for i, r in enumerate(group):
+                    toks[i, plen - len(r.prompt):] = r.prompt
+                    mask[i, plen - len(r.prompt):] = True
+                t0 = time.monotonic()
+                logits, cache = self._prefill(self.params,
+                                              jnp.asarray(toks),
+                                              self._cache_for(b),
+                                              jnp.asarray(mask))
+                logits.block_until_ready()
+                dt = time.monotonic() - t0
+                prefill_s += dt
+                prefill_calls += 1
+                tick(dt, 1)
+                for r in group:
+                    queue.pop(r)
+                sched.seed(group, plen, sim)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                valid = np.ones((b, self.max_seq_len), bool)
+                valid[:, :plen] = mask
+                finished = np.ones((b,), bool)
+                finished[:len(group)] = False
+                remaining = np.zeros((b,), np.int32)
+                for i, r in enumerate(group):
+                    remaining[i] = r.max_new_tokens
+                # Run the admit loop before decoding: a request that
+                # arrived during the seed prefill may already be
+                # admissible into a vacant slot, and the fused loop
+                # early-exits (steps=0) if it sees it pending instead.
+                continue
+            else:
+                # Refill free slots from the arrived, admissible queue.
+                while sched.free_slots():
+                    cand = next((r for r in queue.arrived(sim)
+                                 if sched.can_admit(r)), None)
+                    if cand is None:
+                        break
+                    lb = self._bucket_len(len(cand.prompt))
+                    offset = sched.pos - lb
+                    toks1 = np.full((1, lb), self.pad_id, np.int32)
+                    mask1 = np.zeros((1, lb), bool)
+                    toks1[0, lb - len(cand.prompt):] = cand.prompt
+                    mask1[0, lb - len(cand.prompt):] = True
+                    t0 = time.monotonic()
+                    slot_guess = sched.free_slots()[0]
+                    tok1, cache = self._admit(
+                        self.params, jnp.asarray(toks1), jnp.asarray(mask1),
+                        cache, jnp.asarray(slot_guess, jnp.int32),
+                        jnp.asarray(offset, jnp.int32))
+                    tok1.block_until_ready()
+                    dt = time.monotonic() - t0
+                    prefill_s += dt
+                    prefill_calls += 1
+                    tick(dt, 1)
+                    slot = sched.admit(cand, sim)
+                    assert slot == slot_guess
+                    queue.pop(cand)
+                    tok = tok.at[slot].set(tok1)
+                    row = np.zeros((self.max_seq_len,), bool)
+                    row[offset + (lb - len(cand.prompt)):] = True
+                    valid[slot] = row
+                    finished[slot] = False
+                    remaining[slot] = cand.max_new_tokens
+
+            # One chunk of fused decode.  A live slot always has
+            # remaining <= max_seq_len - pos (admission geometry), so
+            # steps_cap >= 1 and the loop makes progress.
+            live = sched.live_slots()
+            steps_cap = min(chunk, self.max_seq_len - sched.pos)
+            pending = sum(1 for r in queue.arrived(sim)
+                          if sched.can_admit(r))
+            t0 = time.monotonic()
+            steps_d, tok, cache, out_d, fin_d, em_d = self._fused_continuous(
+                self.params, tok, cache, jnp.asarray(valid),
+                jnp.asarray(sched.pos, jnp.int32), jnp.asarray(finished),
+                jnp.asarray(remaining), eos,
+                jnp.asarray(steps_cap, jnp.int32),
+                jnp.asarray(pending, jnp.int32), chunk)
+            steps = int(steps_d)                 # the per-chunk host sync
+            out = np.asarray(out_d)
+            fin_new = np.array(fin_d)            # copy: mutated on admit
+            em = np.asarray(em_d)
+            dt = time.monotonic() - t0
+            decode_s += dt
+            decode_steps += steps
+            tick(dt, steps)
+            if steps == 0:
+                raise RuntimeError(
+                    "continuous decode made no progress (scheduler "
+                    "invariant violated)")
+            for slot in live:
+                if em[slot]:
+                    sched.note_emitted(slot, out[slot, :em[slot]])
+            sched.advance(steps, len(live))
+            finished = fin_new
+            remaining = remaining - em
+            for slot in live:
+                if fin_new[slot]:
+                    rec = sched.retire(slot, sim)
+                    outputs[rec.rid] = np.asarray(rec.tokens, np.int32)
+                    if obslog.active():
+                        obslog.emit("engine.request", dur_s=rec.latency_s,
+                                    rid=rec.rid, slot=rec.slot,
+                                    tokens=rec.n_tokens,
+                                    prompt_len=rec.prompt_len,
+                                    queue_wait_s=rec.queue_wait_s,
+                                    admit_s=rec.admit_s,
+                                    finish_s=rec.finish_s)
+
+        recs = sched.records
+        st = ContinuousStats(
+            prefill_s=prefill_s, decode_s=decode_s,
+            tokens_out=int(sum(r.n_tokens for r in recs)),
+            decode_impl="fused", sim_s=sim, decode_steps=decode_steps,
+            prefill_calls=prefill_calls, n_requests=len(recs),
+            mean_occupancy=sched.mean_occupancy,
+            mean_queue_wait_s=(float(np.mean([r.queue_wait_s
+                                              for r in recs]))
+                               if recs else 0.0),
+            records=recs)
+        if obslog.active():
+            obslog.emit("engine.prefill", dur_s=prefill_s, batch=b,
+                        prompt_len=-1, calls=prefill_calls)
+            obslog.emit("engine.decode", dur_s=decode_s, batch=b,
+                        tokens=st.tokens_out, decode_impl="fused",
+                        tokens_per_s=st.tokens_per_s or None)
+        return outputs, st
+
 
 class EngineEnvironment(BaseEnvironment):
     """Camel Environment backed by the real engine: pulling an arm serves
@@ -255,12 +608,29 @@ class EngineEnvironment(BaseEnvironment):
     per-pull reading the meter integrates exactly, so both paths produce
     bit-identical observations (asserted in tests/test_obs.py).  On a
     Jetson/dGPU deployment pass ``"sysfs"`` / ``"nvml"`` to use measured
-    rail power instead.  Registry name: "engine/<arch>"."""
+    rail power instead.  Registry name: "engine/<arch>".
+
+    With ``scheduler="continuous"`` a pull serves `requests_per_pull`
+    Poisson arrivals (rate = `arrival_rate`, ragged prompt and output
+    lengths from `ArrivalProcess`) through `generate_continuous` with
+    the batch arm as the slot-pool width — the batch-size arms become
+    max-concurrency arms, and the Observation carries measured
+    per-request latency / queue wait / goodput instead of the analytic
+    queueing model."""
 
     def __init__(self, engine: InferenceEngine, board, work,
                  arrival_rate: float = 1.0, prompt_len: int = 32,
                  max_new_tokens: int = 16, seed: int = 0,
-                 sensor=None, sample_hz: float = 20.0):
+                 sensor=None, sample_hz: float = 20.0,
+                 scheduler: str = "static",
+                 requests_per_pull: Optional[int] = None,
+                 eos_id: Optional[int] = None, chunk: int = 16):
+        if scheduler not in ("static", "continuous"):
+            raise ValueError(f"scheduler must be 'static' or 'continuous', "
+                             f"got {scheduler!r}")
+        if arrival_rate <= 0:
+            raise ValueError(f"arrival_rate must be > 0, "
+                             f"got {arrival_rate}")
         self.engine = engine
         self.board = board
         self.work = work
@@ -268,16 +638,96 @@ class EngineEnvironment(BaseEnvironment):
         self.arrival_rate = arrival_rate
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
+        self.scheduler = scheduler
+        self.requests_per_pull = requests_per_pull
+        self.eos_id = eos_id
+        self.chunk = chunk
+        self.seed_base = seed
         self.rng = np.random.default_rng(seed)
         self.sensor = make_sensor(sensor, platform=self.platform) \
             if sensor is not None else None
         self.meter = EnergyMeter(self.sensor, hz=sample_hz) \
             if self.sensor is not None else None
 
+    def _continuous_workload(self, round_index: int,
+                             ) -> List[EngineRequest]:
+        """Poisson arrivals with ragged prompt/output lengths, clipped so
+        every request fits the engine arena (bucketed prompt +
+        max_new_tokens <= max_seq_len)."""
+        eng = self.engine
+        vocab = eng.bundle.cfg.vocab_size
+        n = self.requests_per_pull or 16
+        ap = ArrivalProcess(interval_s=1.0 / self.arrival_rate,
+                            kind="poisson",
+                            prompt_median=self.prompt_len,
+                            prompt_max=eng.max_seq_len,
+                            max_new_tokens=self.max_new_tokens,
+                            seed=self.seed_base + 7919 * (round_index + 1))
+        reqs = []
+        for r in ap.generate(n):
+            mnt = int(self.rng.integers(1, self.max_new_tokens + 1))
+            mnt = min(mnt, eng.max_seq_len - eng.prompt_bucket)
+            lcap = ((eng.max_seq_len - mnt) // eng.prompt_bucket) \
+                * eng.prompt_bucket
+            plen = int(np.clip(r.prompt_len, 1, lcap))
+            toks = self.rng.integers(1, vocab, size=plen).astype(np.int32)
+            reqs.append(EngineRequest(rid=r.rid, prompt=toks,
+                                      max_new_tokens=mnt,
+                                      arrival_s=r.arrival_s))
+        return reqs
+
+    def _pull_continuous(self, batch: int, level: int,
+                         round_index: int) -> Observation:
+        util = self.work.utilization(batch)
+        reqs = self._continuous_workload(round_index)
+        factor = self.work.freq_factor(self.board, level) \
+            / self.work.freq_factor(self.board, self.board.n_levels - 1)
+        m = None
+        kw = dict(n_slots=batch, eos_id=self.eos_id, chunk=self.chunk,
+                  time_scale=factor)
+        if self.meter is not None:
+            set_util = getattr(self.sensor, "set_utilization", None)
+            if set_util is not None:
+                set_util(util)
+            with self.meter.measure() as m:
+                _, st = self.engine.generate_continuous(reqs, **kw)
+        else:
+            _, st = self.engine.generate_continuous(reqs, **kw)
+
+        t_model = st.total_s * factor
+        p = self.board.power(level, util) if m is None else m.avg_watts
+        joules = p * t_model
+        attribute_energy(st.records, joules)
+        lat = float(np.mean([r.latency_s for r in st.records]))
+        metadata = {"backend": "engine", "scheduler": "continuous",
+                    "prefill_s": st.prefill_s, "decode_s": st.decode_s,
+                    "decode_impl": st.decode_impl,
+                    "tokens_per_s": st.tokens_per_s,
+                    "goodput_rps": st.goodput_rps,
+                    "n_requests": st.n_requests,
+                    "decode_steps": st.decode_steps,
+                    "mean_occupancy": st.mean_occupancy,
+                    "mean_queue_wait_s": st.mean_queue_wait_s}
+        if m is not None:
+            metadata.update(sensor=m.sensor_name,
+                            sensor_joules=m.joules,
+                            sensor_peak_w=m.peak_watts,
+                            sensor_samples=m.n_samples)
+        # Latency/queue-wait are measured on the simulation clock (DVFS-
+        # scaled service against real arrival gaps) — no analytic
+        # queueing model, so construct the Observation directly.
+        return Observation(energy=joules / max(st.n_requests, 1),
+                           latency=lat, batch_time=t_model,
+                           queue_wait=st.mean_queue_wait_s, backlog=0.0,
+                           power=p, batch=batch, tokens=st.tokens_out,
+                           metadata=metadata)
+
     def pull(self, knobs: Dict, round_index: int) -> Observation:
         batch = int(knobs["batch"])
         level = self.platform.level_of(knobs["freq_mhz"])
         self.platform.set_level(level)
+        if self.scheduler == "continuous":
+            return self._pull_continuous(batch, level, round_index)
         util = self.work.utilization(batch)
         vocab = self.engine.bundle.cfg.vocab_size
         prompts = [self.rng.integers(1, vocab, size=self.prompt_len)

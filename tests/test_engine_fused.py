@@ -1,6 +1,10 @@
 """Engine hot path: fused fori_loop decode vs the per-token reference,
 left-pad masking, prompt bucketing, input validation, and the retrace /
-cache-reuse bounds a controller sweep relies on."""
+cache-reuse bounds a controller sweep relies on — plus the continuous-
+batching differential harness: slot-level admission must be invisible in
+the token streams (bit-identical to static batching when no slot churn
+happens, and per-request streams independent of co-resident slots when
+it does)."""
 
 import dataclasses
 
@@ -13,6 +17,7 @@ import repro.configs as C
 from repro.models.registry import bundle_for
 from repro.platform import make_env
 from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import EngineRequest
 
 # One representative per model family (dense/GQA transformer, RWKV
 # recurrence, mixed recurrent/attention, softcap+sliding-window, MoE).
@@ -165,3 +170,143 @@ def test_engine_env_reports_throughput():
     obs = env.pull({"freq_mhz": 930.75, "batch": 4}, 0)
     assert obs.metadata["decode_impl"] == "fused"
     assert obs.metadata["tokens_per_s"] > 0
+
+
+# -- continuous batching ----------------------------------------------------
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_continuous_identity_matches_static(name):
+    """Differential identity: with every request present at t=0, equal
+    budgets and no EOS, continuous scheduling performs exactly the static
+    fused schedule (one seed prefill, no admission, no early exit) — the
+    per-request token streams must be bit-identical to `generate` on
+    every model family.  chunk=3 additionally crosses jit boundaries
+    mid-decode (3+3+2 steps), which must not perturb the carry."""
+    eng, cfg = _engine(name)
+    prompts = _prompts(cfg, [5, 9, 7])
+    out_s, _ = eng.generate(prompts, max_new_tokens=8)
+    for chunk in (8, 3):
+        reqs = [EngineRequest(rid=i, prompt=p, max_new_tokens=8)
+                for i, p in enumerate(prompts)]
+        out_c, st = eng.generate_continuous(reqs, n_slots=3, chunk=chunk)
+        assert st.decode_steps == 8 and st.prefill_calls == 1
+        for i in range(3):
+            np.testing.assert_array_equal(
+                out_c[i], out_s[i],
+                err_msg=f"{name} chunk={chunk} request {i}")
+
+
+def test_continuous_stream_independent_of_co_residents():
+    """A request's token stream must not depend on what shares the slot
+    pool with it: serve a long request alongside churning short ones
+    (mid-generate admission into the neighbouring slot) and compare its
+    stream to a solo static run."""
+    eng, cfg = _engine("smollm-360m")
+    prompts = _prompts(cfg, [5, 9, 13], seed=3)
+    reqs = [EngineRequest(rid=0, prompt=prompts[0], max_new_tokens=20),
+            EngineRequest(rid=1, prompt=prompts[1], max_new_tokens=4),
+            EngineRequest(rid=2, prompt=prompts[2], max_new_tokens=6,
+                          arrival_s=0.5)]
+    out_c, st = eng.generate_continuous(reqs, n_slots=2, chunk=4,
+                                        step_time_s=1.0)
+    assert st.prefill_calls >= 2       # rid 2 was admitted mid-generate
+    solo, _ = eng.generate([prompts[0]], max_new_tokens=20)
+    np.testing.assert_array_equal(out_c[0], solo[0])
+    assert len(out_c[1]) == 4 and len(out_c[2]) == 6
+
+
+def test_continuous_eos_early_exit():
+    """An all-EOS-at-step-1 batch must finish in O(1) decode steps, not
+    max_new_tokens: probe the greedy continuation, declare it EOS."""
+    eng, cfg = _engine("smollm-360m")
+    prompt = _prompts(cfg, [6], seed=4)[0]
+    probe, _ = eng.generate([prompt] * 4, max_new_tokens=1)
+    eos = int(probe[0, 0])
+    reqs = [EngineRequest(rid=i, prompt=prompt, max_new_tokens=24)
+            for i in range(4)]
+    out, st = eng.generate_continuous(reqs, n_slots=4, eos_id=eos,
+                                      chunk=24)
+    assert st.decode_steps <= 2, \
+        f"early exit took {st.decode_steps} steps (cap 24)"
+    for i in range(4):
+        assert out[i][-1] == eos
+
+
+def test_continuous_occupancy_sweep_no_retrace():
+    """Slot churn must not retrace: after one warmup covering the shapes
+    (seed prefill, single-row admission, chunked while_loop), serving
+    workloads whose occupancy drains full -> one — with different
+    budgets, arrival patterns and EOS positions — keeps `compile_counts`
+    flat at one prefill/decode trace per shape."""
+    eng, cfg = _engine("smollm-360m", max_batch=4, max_seq_len=64)
+
+    def serve(seed, budgets, stagger):
+        prompts = _prompts(cfg, [5, 9, 13, 7], seed=seed)
+        reqs = [EngineRequest(rid=i, prompt=p, max_new_tokens=m,
+                              arrival_s=stagger * i)
+                for i, (p, m) in enumerate(zip(prompts, budgets))]
+        eng.generate_continuous(reqs, n_slots=4, chunk=4, step_time_s=1.0)
+
+    serve(0, [16, 8, 4, 2], stagger=0.0)   # drain: 4 live -> 1 live
+    serve(1, [12, 3, 5, 2], stagger=2.0)   # admission mid-generate
+    baseline = dict(eng.compile_counts)
+    for s in range(2, 7):
+        serve(s, [2 + 3 * s % 13, 16, 5, 8], stagger=0.5 * (s % 3))
+        assert eng.compile_counts == baseline, \
+            f"retrace at sweep {s}: {eng.compile_counts} != {baseline}"
+
+
+def test_continuous_validation_errors():
+    eng, cfg = _engine("smollm-360m", max_batch=2)
+    p = _prompts(cfg, [4])[0]
+    ok = EngineRequest(rid=0, prompt=p, max_new_tokens=4)
+    with pytest.raises(ValueError, match="at least one"):
+        eng.generate_continuous([])
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.generate_continuous(
+            [ok, EngineRequest(rid=0, prompt=p, max_new_tokens=2)])
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.generate_continuous(
+            [EngineRequest(rid=1, prompt=np.zeros(0, np.int32),
+                           max_new_tokens=2)])
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.generate_continuous(
+            [EngineRequest(rid=2, prompt=p, max_new_tokens=40)])
+    with pytest.raises(ValueError, match="eos_id"):
+        eng.generate_continuous([ok], eos_id=-5)
+    with pytest.raises(ValueError, match="chunk"):
+        eng.generate_continuous([ok], chunk=0)
+    with pytest.raises(ValueError, match="n_slots"):
+        eng.generate_continuous([ok], n_slots=5)
+
+
+def test_continuous_rejects_encdec():
+    """Absolute sinusoidal positions forbid offset admission — the
+    encdec family must be refused up front."""
+    cfg = C.get_smoke("seamless-m4t-large-v2")
+    b = bundle_for(cfg)
+    params = b.init_params(jax.random.PRNGKey(0))
+    eng = InferenceEngine(b, params, max_batch=2, max_seq_len=48)
+    req = EngineRequest(rid=0, prompt=np.ones(4, np.int32),
+                        max_new_tokens=4)
+    with pytest.raises(ValueError, match="encdec"):
+        eng.generate_continuous([req])
+
+
+def test_engine_env_continuous_reports_goodput():
+    """The continuous environment serves Poisson arrivals and reports
+    measured goodput / queue-wait / occupancy instead of the analytic
+    queueing model."""
+    env = make_env("engine/smollm-360m", seed=0, prompt_len=16,
+                   max_new_tokens=8, max_batch=8, max_seq_len=64,
+                   scheduler="continuous", requests_per_pull=6,
+                   arrival_rate=4.0)
+    obs = env.pull({"freq_mhz": 930.75, "batch": 4}, 0)
+    md = obs.metadata
+    assert md["scheduler"] == "continuous"
+    assert md["n_requests"] == 6
+    assert md["goodput_rps"] > 0
+    assert 0 < md["mean_occupancy"] <= 4
+    assert obs.energy > 0 and obs.latency > 0
+    assert obs.queue_wait == md["mean_queue_wait_s"]

@@ -373,3 +373,59 @@ def test_trace_report_renders_per_arm_table(tmp_path):
               if ln.lstrip().startswith("*")]
     assert len(marked) == 1 and " 7 " in marked[0]   # committed arm marked
     assert "metrics snapshot:" in text
+
+
+def test_trace_report_blank_cells_for_missing_metadata(tmp_path):
+    """Pulls without tokens_per_s/cost (non-engine backends) and multiple
+    arms with no cost at all must render blank cells, never crash on a
+    missing key or a None comparison in the sort."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    try:
+        import trace_report
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "t.jsonl")
+    with obs.observing(path):
+        # two cost-less arms force the None-None sort comparison; no
+        # pull carries tokens_per_s or power_w
+        obs.emit("pull", arm=1, energy_j=2.0, latency_s=1.0,
+                 knobs={"batch": 1})
+        obs.emit("pull", arm=2, energy_j=3.0, latency_s=1.5,
+                 knobs={"batch": 2})
+        obs.emit("pull", arm=0, energy_j=1.0, latency_s=0.5, cost=0.5,
+                 edp=0.5, knobs={"batch": 4})
+    text = trace_report.report(path)
+    assert "per-arm summary (3 pulls, 3 distinct arms" in text
+    arm_rows = [ln for ln in text.splitlines()
+                if ln.lstrip().lstrip("*").strip()[:1].isdigit()
+                and "batch=" in ln]
+    assert len(arm_rows) == 3
+    for row in arm_rows[1:]:          # the two cost-less arms
+        assert "-" in row             # blank cells, not a crash
+
+
+def test_trace_report_renders_per_request_table(tmp_path):
+    """engine.request spans (continuous batching) get a per-request
+    table; requests missing optional attrs render blank cells."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tools"))
+    try:
+        import trace_report
+    finally:
+        sys.path.pop(0)
+    path = str(tmp_path / "t.jsonl")
+    with obs.observing(path):
+        obs.emit("engine.request", dur_s=1.5, rid=0, slot=1,
+                 tokens=8, prompt_len=5, queue_wait_s=0.25)
+        obs.emit("engine.request", dur_s=0.5, rid=1)
+    text = trace_report.report(path)
+    assert "per-request summary (2 requests)" in text
+    lines = text.splitlines()
+    row0 = next(ln for ln in lines if ln.strip().startswith("0"))
+    assert "8" in row0 and "0.25" in row0 and "1.5" in row0
+    row1 = next(ln for ln in lines if ln.strip().startswith("1 "))
+    assert "-" in row1                # missing attrs -> blank cells
+    assert "0.5" in row1              # but the span duration renders
+    # metrics derived from the spans (counter + latency histogram)
+    assert "engine_requests_total" in text

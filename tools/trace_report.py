@@ -5,6 +5,8 @@ and renders:
 
 * the per-arm pull summary — pulls, mean energy, latency, EDP, cost,
   mean power, mean staleness (async runs), with the committed arm marked;
+* the per-request summary (continuous-batching runs): request count,
+  queue wait / latency / tokens from ``engine.request`` spans;
 * span totals by name (where the run's wall-clock went);
 * the closing metrics snapshot (counters / gauges / histograms);
 * the run-level sensor measurement, when a non-simulated sensor ran.
@@ -89,7 +91,11 @@ def arm_table(rows: List[dict]) -> List[str]:
             "tok_s": _mean([a.get("tokens_per_s") for a in attrs]),
             "stale": _mean([a.get("staleness") for a in attrs]),
         })
-    stats.sort(key=lambda s: (s["cost"] is None, s["cost"], s["arm"]))
+    # Missing metadata (e.g. pulls without cost) must render as blank
+    # cells, never crash the report: sort strictly on non-None keys.
+    stats.sort(key=lambda s: (s["cost"] is None,
+                              s["cost"] if s["cost"] is not None else 0.0,
+                              s["arm"]))
     for s in stats:
         mark = " *" if s["arm"] == committed else "  "
         lines.append(
@@ -100,6 +106,36 @@ def arm_table(rows: List[dict]) -> List[str]:
     if committed is not None:
         knobs = _knobs_str(commits[-1].get("attrs", {}).get("knobs"))
         lines.append(f"committed: arm {committed} ({knobs})")
+    return lines
+
+
+def request_table(rows: List[dict], max_rows: int = 32) -> List[str]:
+    """Per-request summary from `engine.request` spans (continuous
+    batching).  Missing attributes render as blank cells."""
+    reqs = [dict(r.get("attrs", {}), dur_s=r.get("dur_s"))
+            for r in rows if r.get("name") == "engine.request"]
+    if not reqs:
+        return []
+    waits = [a.get("queue_wait_s") for a in reqs]
+    lats = [a.get("dur_s") for a in reqs]
+    toks = [a.get("tokens") for a in reqs]
+    lines = ["",
+             f"per-request summary ({len(reqs)} requests): "
+             f"mean wait {_fmt(_mean(waits), 1).strip()} s, "
+             f"mean latency {_fmt(_mean(lats), 1).strip()} s, "
+             f"mean tokens {_fmt(_mean(toks), 1).strip()}",
+             f"{'rid':>6}{'slot':>6}{'prompt':>8}{'tokens':>8}"
+             f"{'wait_s':>10}{'latency_s':>11}"]
+    shown = sorted(reqs, key=lambda a: (a.get("rid") is None,
+                                        a.get("rid") or 0))[:max_rows]
+    for a in shown:
+        lines.append(f"{_fmt(a.get('rid'), 6)}{_fmt(a.get('slot'), 6)}"
+                     f"{_fmt(a.get('prompt_len'), 8)}"
+                     f"{_fmt(a.get('tokens'), 8)}"
+                     f"{_fmt(a.get('queue_wait_s'), 10)}"
+                     f"{_fmt(a.get('dur_s'), 11)}")
+    if len(reqs) > max_rows:
+        lines.append(f"  ... {len(reqs) - max_rows} more")
     return lines
 
 
@@ -158,6 +194,7 @@ def report(path: str) -> str:
     head = ", ".join(f"{n} {k}" for k, n in sorted(counts.items()))
     lines = [f"== {path}: {len(rows)} rows ({head})", ""]
     lines += arm_table(rows)
+    lines += request_table(rows)
     lines += span_table(rows)
     lines += sensor_lines(rows)
     lines += metric_table(rows)
