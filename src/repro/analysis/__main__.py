@@ -1,0 +1,151 @@
+"""CLI for the trace-discipline analyzer.
+
+Usage::
+
+    python -m repro.analysis --check                # both stages, CI gate
+    python -m repro.analysis --lint                 # AST stage only
+    python -m repro.analysis --audit                # jaxpr stage only
+    python -m repro.analysis --check --json out.json
+    python -m repro.analysis --update-budgets       # re-baseline A104
+    python -m repro.analysis --update-baseline      # grandfather findings
+    python -m repro.analysis --list-rules
+
+Exit status is 0 iff no finding outside the checked-in baseline
+(`src/repro/analysis/baseline.json`).  Grandfathered findings are still
+printed (marked "baseline") so they stay visible in review.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+import repro
+from repro.analysis.findings import (Finding, Report, load_baseline,
+                                     render_budgets, render_findings,
+                                     write_baseline)
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import rule_catalogue, rule_titles
+
+_PKG_ROOT = os.path.abspath(list(repro.__path__)[0])
+_REPO_ROOT = os.path.dirname(os.path.dirname(_PKG_ROOT))
+_ANALYSIS_DIR = os.path.join(_PKG_ROOT, "analysis")
+DEFAULT_BASELINE = os.path.join(_ANALYSIS_DIR, "baseline.json")
+
+
+def _parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/Pallas trace-discipline analyzer "
+                    "(AST lint + jaxpr contract audit)")
+    p.add_argument("--check", action="store_true",
+                   help="run both stages and gate on new findings "
+                        "(default when no stage flag is given)")
+    p.add_argument("--lint", action="store_true",
+                   help="run only the AST lint stage")
+    p.add_argument("--audit", action="store_true",
+                   help="run only the jaxpr audit stage")
+    p.add_argument("--root", default=_PKG_ROOT,
+                   help="package root to lint (default: the installed "
+                        "repro package)")
+    p.add_argument("--json", metavar="PATH",
+                   help="write the machine-readable report here")
+    p.add_argument("--baseline", default=DEFAULT_BASELINE,
+                   help="grandfathered-findings file")
+    p.add_argument("--budgets", default=None,
+                   help="primitive-budget file (default: "
+                        "src/repro/analysis/analysis_budgets.json)")
+    p.add_argument("--update-budgets", action="store_true",
+                   help="re-record observed primitive counts and budgets")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline with the current findings")
+    p.add_argument("--no-retrace", action="store_true",
+                   help="skip the (slower) engine retrace audit")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    p.add_argument("--rules", metavar="IDS",
+                   help="comma-separated lint rule ids to run "
+                        "(e.g. R001,R003)")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = _parser().parse_args(argv)
+
+    if args.list_rules:
+        catalogue = rule_catalogue()
+        print(catalogue if isinstance(catalogue, str)
+              else "\n".join(catalogue))
+        return 0
+
+    do_lint = args.lint or args.check or not (args.lint or args.audit)
+    do_audit = args.audit or args.check or not (args.lint or args.audit)
+
+    report = Report()
+    report.stats["root"] = args.root
+
+    if do_lint:
+        rule_ids = ([r.strip() for r in args.rules.split(",")]
+                    if args.rules else None)
+        lint_findings = run_lint(args.root, repo_root=_REPO_ROOT,
+                                 rule_ids=rule_ids)
+        report.extend(lint_findings)
+        report.stats["lint_findings"] = len(lint_findings)
+
+    if do_audit:
+        from repro.analysis.jaxpr_audit import (DEFAULT_BUDGETS_PATH,
+                                                run_audit)
+        budgets_path = args.budgets or DEFAULT_BUDGETS_PATH
+        audit_findings, rows = run_audit(
+            budgets_path=budgets_path,
+            update_budgets=args.update_budgets,
+            include_retrace=not args.no_retrace)
+        report.extend(audit_findings)
+        report.budgets = rows
+        report.stats["audit_findings"] = len(audit_findings)
+        if args.update_budgets:
+            print(f"budgets written to {budgets_path}")
+
+    if args.update_baseline:
+        write_baseline(args.baseline, report.findings)
+        print(f"baseline written to {args.baseline} "
+              f"({len(report.findings)} grandfathered)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new = report.new_findings(baseline)
+    grandfathered = [f for f in report.findings if f.key in baseline]
+    report.stats["new_findings"] = len(new)
+    report.stats["grandfathered"] = len(grandfathered)
+
+    if args.json:
+        report.write_json(args.json)
+
+    titles = rule_titles()
+    if report.budgets:
+        print(render_budgets(report.budgets))
+        print()
+    if grandfathered:
+        print(f"-- {len(grandfathered)} grandfathered finding(s) "
+              f"(baseline) --")
+        print(render_findings(grandfathered, titles))
+        print()
+    if new:
+        print(f"-- {len(new)} NEW finding(s) --")
+        print(render_findings(new, titles))
+        print()
+        print(f"FAIL: {len(new)} new finding(s); fix them, add a "
+              f"documented pragma, or (last resort) --update-baseline")
+        return 1
+    stages = [s for s, on in (("lint", do_lint), ("audit", do_audit))
+              if on]
+    print(f"OK: no new findings ({'+'.join(stages)}; "
+          f"{len(report.findings)} total, {len(grandfathered)} "
+          f"grandfathered)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,152 @@
+"""Finding/report data model shared by the lint and jaxpr-audit stages.
+
+A `Finding` is one violation: rule id, file, line, message, fix-it hint.
+Findings serialize to JSON (the CI artifact) and render as human tables.
+The checked-in baseline (`baseline.json`) lists grandfathered findings
+by stable key — ``rule:path:message`` (line numbers shift too easily to
+key on) — so the gate fails only on *new* violations and every
+grandfathered one is visible in review.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Set
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str             # "R001" ... (lint) / "A101" ... (audit)
+    path: str             # repo-relative posix path ("" for audit entries)
+    line: int             # 1-based; 0 when not tied to a source line
+    message: str
+    hint: str = ""        # fix-it hint (what to change or how to suppress)
+    stage: str = "lint"   # "lint" | "audit"
+    entry: str = ""       # audit entry point ("smollm-360m/prefill", ...)
+
+    @property
+    def key(self) -> str:
+        """Stable identity for baseline matching (line-number free)."""
+        return f"{self.rule}:{self.path or self.entry}:{self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        names = {f.name for f in dataclasses.fields(cls)}
+        base = {"rule": "", "path": "", "line": 0, "message": ""}
+        base.update({k: v for k, v in d.items() if k in names})
+        return cls(**base)
+
+
+@dataclasses.dataclass
+class Report:
+    """One analyzer run: findings from both stages + budget bookkeeping."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    budgets: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    stats: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    def new_findings(self, baseline: Set[str]) -> List[Finding]:
+        return [f for f in self.findings if f.key not in baseline]
+
+    def to_json(self) -> dict:
+        return {"findings": [f.to_dict() for f in self.findings],
+                "budgets": self.budgets,
+                "stats": self.stats}
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def load_report(path: str) -> Report:
+    with open(path) as fh:
+        raw = json.load(fh)
+    return Report(findings=[Finding.from_dict(d)
+                            for d in raw.get("findings", [])],
+                  budgets=raw.get("budgets", {}),
+                  stats=raw.get("stats", {}))
+
+
+def load_baseline(path: Optional[str]) -> Set[str]:
+    """Baseline file: {"findings": [{rule, path, message, ...}, ...]}.
+    Returns the set of grandfathered keys; missing file = empty."""
+    if path is None:
+        return set()
+    try:
+        with open(path) as fh:
+            raw = json.load(fh)
+    except FileNotFoundError:
+        return set()
+    keys = set()
+    for d in raw.get("findings", []):
+        keys.add(Finding.from_dict(d).key)
+    return keys
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    payload = {"findings": [{"rule": f.rule, "path": f.path,
+                             "entry": f.entry, "message": f.message}
+                            for f in findings]}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def render_findings(findings: List[Finding],
+                    titles: Optional[Dict[str, str]] = None) -> str:
+    """Human table: findings grouped by rule, sorted by path:line."""
+    if not findings:
+        return "no findings"
+    by_rule: Dict[str, List[Finding]] = defaultdict(list)
+    for f in findings:
+        by_rule[f.rule].append(f)
+    lines = []
+    for rule in sorted(by_rule):
+        fs = sorted(by_rule[rule], key=lambda f: (f.path, f.line, f.entry))
+        title = (titles or {}).get(rule, "")
+        lines.append(f"{rule} {title} ({len(fs)} finding"
+                     f"{'s' if len(fs) != 1 else ''})")
+        for f in fs:
+            loc = f"{f.path}:{f.line}" if f.path else f"<{f.entry}>"
+            lines.append(f"  {loc}  {f.message}")
+            if f.hint:
+                lines.append(f"      hint: {f.hint}")
+    return "\n".join(lines)
+
+
+def render_budgets(budgets: Dict[str, dict]) -> str:
+    """Budget diff table: actual vs last-observed vs budget per entry."""
+    if not budgets:
+        return ""
+    lines = ["jaxpr primitive budgets (count / observed / budget):",
+             f"{'entry':<42}{'count':>8}{'observed':>10}{'budget':>8}"
+             f"{'delta':>8}  status"]
+    for entry in sorted(budgets):
+        b = budgets[entry]
+        count, obs = b.get("count"), b.get("observed")
+        budget = b.get("budget")
+        delta = (count - obs) if (count is not None and obs is not None) \
+            else None
+        status = b.get("status", "?")
+        lines.append(f"{entry:<42}{_i(count):>8}{_i(obs):>10}"
+                     f"{_i(budget):>8}{_d(delta):>8}  {status}")
+    return "\n".join(lines)
+
+
+def _i(v) -> str:
+    return "-" if v is None else str(v)
+
+
+def _d(v) -> str:
+    if v is None:
+        return "-"
+    return f"{v:+d}" if v else "0"

@@ -1,0 +1,555 @@
+"""AST lint stage: package index, jit-reachability call graph, pragmas.
+
+The linter parses every file under the package root, builds a
+per-module symbol table plus a package-wide call graph, and computes the
+**jit-reachable** set: functions that execute under a JAX trace.  Roots:
+
+* functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``
+  / ``@jax.checkpoint``;
+* callables passed to ``jax.jit(...)`` / ``jax.checkpoint(...)`` at call
+  sites (including ``jax.jit(self._method, ...)``);
+* bodies handed to ``lax.fori_loop`` / ``while_loop`` / ``scan`` /
+  ``cond`` / ``switch`` / ``map`` / ``associative_scan`` and kernels
+  handed to ``pl.pallas_call`` (directly or via ``functools.partial``);
+* the documented traced contracts of the model substrate — ``prefill``
+  / ``decode_step`` / ``forward`` in ``models/`` modules are always
+  entered under jit by the serving engine (their ``cfg`` parameter is a
+  static config dataclass, which the rules treat as non-tracer).
+
+Reachability then propagates through in-package call edges (direct
+calls, ``self.method(...)``, and calls through ``repro.*`` module
+imports), so helpers called from a traced function inherit its
+discipline obligations.
+
+Suppression pragma (checked by every rule)::
+
+    some_code()   # analysis: ignore[R001] trace-time constant, not a sync
+
+The bracket lists one or more rule ids (or ``*``); the trailing text is
+the mandatory justification — a pragma without one is itself reported
+(rule R000).  A pragma on a comment-only line applies to the next line.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+PRAGMA_RE = re.compile(
+    r"#\s*analysis:\s*ignore\[([A-Za-z0-9*,\s]+)\]\s*(.*?)\s*$")
+
+# Traced-contract function names per package subtree: these are entered
+# under jit by the engine/launcher even though the jit wrapper is a
+# lambda the call graph cannot see through.
+TRACED_CONTRACTS = {
+    "models": {"prefill", "decode_step", "forward"},
+}
+
+# Parameters of traced-contract functions that hold static (non-tracer)
+# python config objects, not arrays.
+STATIC_PARAM_NAMES = {"cfg", "config", "self"}
+
+_LAX_BODY_ARGS = {
+    "fori_loop": (2,),
+    "while_loop": (0, 1),
+    "scan": (0,),
+    "map": (0,),
+    "associative_scan": (0,),
+    "cond": (1, 2),
+    "switch": None,          # every arg from 1 on is a branch
+    "checkpoint": (0,),
+    "remat": (0,),
+    "custom_vjp": (0,),
+    "custom_jvp": (0,),
+    "pallas_call": (0,),
+}
+
+
+# ---------------------------------------------------------------------------
+# Source files + pragmas
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int
+    rules: Set[str]        # {"R001", ...} or {"*"}
+    reason: str
+    code_before: bool      # pragma shares the line with code
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: str              # absolute
+    rel: str               # repo-relative posix path
+    text: str
+    tree: ast.Module
+    pragmas: List[Pragma]
+
+    @classmethod
+    def parse(cls, path: str, rel: str) -> "SourceFile":
+        with open(path) as fh:
+            text = fh.read()
+        tree = ast.parse(text, filename=rel)
+        pragmas = []
+        for i, raw in enumerate(text.splitlines(), start=1):
+            m = PRAGMA_RE.search(raw)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            before = raw[:m.start()].strip()
+            pragmas.append(Pragma(line=i, rules=rules,
+                                  reason=m.group(2).strip(),
+                                  code_before=bool(before)))
+        return cls(path=path, rel=rel, text=text, tree=tree,
+                   pragmas=pragmas)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        for p in self.pragmas:
+            if not p.reason:
+                continue           # undocumented pragma suppresses nothing
+            if rule not in p.rules and "*" not in p.rules:
+                continue
+            if p.code_before and p.line == line:
+                return True
+            if not p.code_before and p.line in (line, line - 1):
+                return True
+        return False
+
+    def pragma_findings(self) -> List[Finding]:
+        """R000: a suppression without a written justification is itself
+        a violation (undocumented suppressions hide real regressions)."""
+        out = []
+        for p in self.pragmas:
+            if p.reason:
+                continue
+            out.append(Finding(
+                rule="R000", path=self.rel, line=p.line,
+                message="suppression pragma without a justification",
+                hint="write the reason after the bracket: "
+                     "# analysis: ignore[R00x] <why this is safe>"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Function records + module symbol tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str                      # "<rel>::<dotted.name>"
+    name: str                          # bare name
+    node: ast.AST                      # FunctionDef / Lambda
+    sf: SourceFile
+    class_name: Optional[str] = None
+    params: List[str] = dataclasses.field(default_factory=list)
+    static_params: Set[str] = dataclasses.field(default_factory=set)
+    jit_root: bool = False
+    jit_reason: str = ""
+    loop_body: bool = False            # body/cond of a lax control-flow op
+    reachable: bool = False
+    reach_via: str = ""
+    calls: Set[str] = dataclasses.field(default_factory=set)  # qualnames
+
+    @property
+    def line(self) -> int:
+        return getattr(self.node, "lineno", 0)
+
+
+def _param_names(node: ast.AST) -> List[str]:
+    if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+        return []
+    a = node.args
+    names = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    names += [p.arg for p in a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def dotted(node: ast.expr) -> Optional[str]:
+    """'jax.lax.fori_loop' for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _static_argnums_literal(call: ast.Call) -> Optional[List[object]]:
+    """Literal static_argnums/static_argnames of a jax.jit call, or None
+    when absent/not statically evaluable."""
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "static_argnames"):
+            try:
+                v = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                return None
+            if isinstance(v, (int, str)):
+                return [v]
+            return list(v)
+    return []
+
+
+class _ModuleIndexer(ast.NodeVisitor):
+    """Collects functions, import aliases, and jit-root evidence for one
+    module."""
+
+    def __init__(self, sf: SourceFile, index: "PackageIndex"):
+        self.sf = sf
+        self.index = index
+        self.scope: List[str] = []
+        self.class_stack: List[str] = []
+        self._lambda_n = 0
+
+    # -- helpers -----------------------------------------------------------
+
+    def _qual(self, name: str) -> str:
+        return f"{self.sf.rel}::{'.'.join(self.scope + [name])}"
+
+    def _add_function(self, node, name: str) -> FunctionInfo:
+        q = self._qual(name)
+        fi = FunctionInfo(qualname=q, name=name, node=node, sf=self.sf,
+                          class_name=(self.class_stack[-1]
+                                      if self.class_stack else None),
+                          params=_param_names(node))
+        if fi.class_name and fi.params and fi.params[0] == "self":
+            fi.static_params.add("self")
+        self.index.functions[q] = fi
+        self.index.by_name.setdefault((self.sf.rel, name), []).append(fi)
+        return fi
+
+    def _mark_root(self, target: ast.expr, reason: str,
+                   static: Optional[Sequence[object]] = None,
+                   loop_body: bool = False) -> None:
+        """`target` is an expression passed where a traced callable is
+        expected: resolve it to an in-module function if possible."""
+        if isinstance(target, ast.Lambda):
+            name = f"<lambda:{target.lineno}>"
+            fi = self._add_function(target, name)
+            self._root(fi, reason, static, loop_body)
+            return
+        if isinstance(target, ast.Call):
+            # functools.partial(kernel, ...) — unwrap to the callee.
+            fn = dotted(target.func)
+            if fn and fn.split(".")[-1] == "partial" and target.args:
+                self._mark_root(target.args[0], reason, static, loop_body)
+            return
+        name = None
+        if isinstance(target, ast.Name):
+            name = target.id
+        elif isinstance(target, ast.Attribute) and \
+                isinstance(target.value, ast.Name) and \
+                target.value.id == "self":
+            name = target.attr
+        if name is None:
+            return
+        self.index.pending_roots.append(
+            (self.sf.rel, name, reason, tuple(static or ()), loop_body))
+
+    def _root(self, fi: FunctionInfo, reason: str,
+              static: Optional[Sequence[object]] = None,
+              loop_body: bool = False) -> None:
+        fi.jit_root = True
+        fi.jit_reason = fi.jit_reason or reason
+        fi.loop_body = fi.loop_body or loop_body
+        self._apply_static(fi, static)
+
+    @staticmethod
+    def _apply_static(fi: FunctionInfo,
+                      static: Optional[Sequence[object]]) -> None:
+        if not static:
+            return
+        pos = [p for p in fi.params if p != "self"]
+        for s in static:
+            if isinstance(s, str) and s in fi.params:
+                fi.static_params.add(s)
+            elif isinstance(s, int) and 0 <= s < len(pos):
+                fi.static_params.add(pos[s])
+
+    # -- visitors ----------------------------------------------------------
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.scope.append(node.name)
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+        self.scope.pop()
+
+    def _visit_def(self, node) -> None:
+        fi = self._add_function(node, node.name)
+        for dec in node.decorator_list:
+            d = dotted(dec) or ""
+            if d.split(".")[-1] in ("jit", "checkpoint", "remat"):
+                self._root(fi, f"decorated @{d}")
+            elif isinstance(dec, ast.Call):
+                dfn = dotted(dec.func) or ""
+                tail = dfn.split(".")[-1]
+                if tail in ("jit", "checkpoint", "remat"):
+                    self._root(fi, f"decorated @{dfn}(...)",
+                               _static_argnums_literal(dec))
+                elif tail == "partial" and dec.args:
+                    inner = dotted(dec.args[0]) or ""
+                    if inner.split(".")[-1] in ("jit", "checkpoint",
+                                                "remat"):
+                        self._root(fi, f"decorated @partial({inner}, ...)",
+                                   _static_argnums_literal(dec))
+                elif tail == "when":
+                    # @pl.when(cond) inside a kernel: traced region.
+                    self._root(fi, "pl.when branch", loop_body=True)
+        top = _top_package(self.sf.rel)
+        if node.name in TRACED_CONTRACTS.get(top, ()) and \
+                not self.class_stack:
+            self._root(fi, f"traced contract {top}/{node.name}")
+            for p in fi.params:
+                if p in STATIC_PARAM_NAMES:
+                    fi.static_params.add(p)
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_def
+    visit_AsyncFunctionDef = _visit_def
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = dotted(node.func)
+        tail = fn.split(".")[-1] if fn else ""
+        if tail == "jit" and node.args:
+            self._mark_root(node.args[0], f"passed to {fn}()",
+                            _static_argnums_literal(node))
+        elif tail in _LAX_BODY_ARGS and fn and (
+                "lax" in fn or tail in ("pallas_call", "checkpoint",
+                                        "remat")):
+            idxs = _LAX_BODY_ARGS[tail]
+            if idxs is None:                      # switch: branches 1..n
+                idxs = range(1, len(node.args))
+            for i in idxs:
+                if i < len(node.args):
+                    self._mark_root(node.args[i], f"{tail} body",
+                                    loop_body=tail not in ("pallas_call",
+                                                           "checkpoint",
+                                                           "remat"))
+        # Record call edges for the reachability pass.
+        owner = ".".join(self.scope)
+        if owner:
+            self.index.edges.append(
+                (self.sf.rel, owner, node))
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            alias = a.asname or a.name.split(".")[0]
+            self.index.imports[self.sf.rel][alias] = a.name
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for a in node.names:
+            alias = a.asname or a.name
+            self.index.imports[self.sf.rel][alias] = f"{mod}.{a.name}"
+        self.generic_visit(node)
+
+
+def _top_package(rel: str) -> str:
+    """First path component under the package root ('models', 'kernels',
+    ...)."""
+    parts = rel.replace("\\", "/").split("/")
+    # rel looks like src/repro/models/x.py or models/x.py or <fixture>.py
+    for anchor in ("repro",):
+        if anchor in parts:
+            i = parts.index(anchor)
+            if i + 1 < len(parts) - 1:
+                return parts[i + 1]
+    return parts[0] if len(parts) > 1 else ""
+
+
+# ---------------------------------------------------------------------------
+# Package index + reachability
+# ---------------------------------------------------------------------------
+
+
+class PackageIndex:
+    """Parsed package: files, functions, imports, jit-reachability."""
+
+    def __init__(self, files: List[SourceFile]):
+        self.files = files
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_name: Dict[Tuple[str, str], List[FunctionInfo]] = {}
+        self.imports: Dict[str, Dict[str, str]] = {f.rel: {}
+                                                   for f in files}
+        self.pending_roots: List[tuple] = []
+        self.edges: List[tuple] = []
+        for sf in files:
+            _ModuleIndexer(sf, self).visit(sf.tree)
+        self._resolve_roots()
+        self._resolve_edges()
+        self._propagate()
+
+    @classmethod
+    def build(cls, root: str, repo_root: Optional[str] = None,
+              paths: Optional[Sequence[str]] = None) -> "PackageIndex":
+        """Parse `paths` if given, else every *.py under `root`."""
+        repo_root = repo_root or os.getcwd()
+        files = []
+        if paths is None:
+            paths = sorted(
+                os.path.join(dp, f)
+                for dp, _dn, fns in os.walk(root) for f in fns
+                if f.endswith(".py"))
+        for p in paths:
+            rel = os.path.relpath(os.path.abspath(p), repo_root)
+            files.append(SourceFile.parse(p, rel.replace(os.sep, "/")))
+        return cls(files)
+
+    # -- resolution --------------------------------------------------------
+
+    def _candidates(self, rel: str, name: str) -> List[FunctionInfo]:
+        hits = self.by_name.get((rel, name), [])
+        if hits:
+            return hits
+        # through an in-package `from repro.x import name` alias
+        target = self.imports.get(rel, {}).get(name)
+        if target and target.startswith("repro."):
+            mod, _, fn = target.rpartition(".")
+            mrel = self._module_rel(mod)
+            if mrel:
+                return self.by_name.get((mrel, fn), [])
+        return []
+
+    def _module_rel(self, module: str) -> Optional[str]:
+        """'repro.models.common' -> the rel path of that file, if parsed."""
+        suffix = module.replace(".", "/") + ".py"
+        for sf in self.files:
+            if sf.rel.endswith(suffix):
+                return sf.rel
+        return None
+
+    def _resolve_roots(self) -> None:
+        for rel, name, reason, static, loop_body in self.pending_roots:
+            for fi in self._candidates(rel, name):
+                fi.jit_root = True
+                fi.jit_reason = fi.jit_reason or reason
+                fi.loop_body = fi.loop_body or loop_body
+                _ModuleIndexer._apply_static(fi, static)
+
+    def _resolve_edges(self) -> None:
+        for rel, owner, call in self.edges:
+            caller = self.functions.get(f"{rel}::{owner}")
+            if caller is None:
+                continue
+            targets: List[FunctionInfo] = []
+            f = call.func
+            if isinstance(f, ast.Name):
+                # nearest enclosing def first, then module level / imports
+                parts = owner.split(".")
+                for i in range(len(parts), -1, -1):
+                    q = f"{rel}::{'.'.join(parts[:i] + [f.id])}"
+                    if q in self.functions:
+                        targets = [self.functions[q]]
+                        break
+                if not targets:
+                    targets = self._candidates(rel, f.id)
+            elif isinstance(f, ast.Attribute):
+                base = dotted(f.value)
+                if base == "self":
+                    targets = [fi for fi in self.by_name.get(
+                        (rel, f.attr), []) if fi.class_name]
+                elif base:
+                    # module-alias call: common.rmsnorm(...)
+                    mod = self.imports.get(rel, {}).get(base)
+                    if mod and mod.startswith("repro."):
+                        mrel = self._module_rel(mod)
+                        if mrel:
+                            targets = self.by_name.get((mrel, f.attr), [])
+            for t in targets:
+                caller.calls.add(t.qualname)
+
+    def _propagate(self) -> None:
+        frontier = [fi for fi in self.functions.values() if fi.jit_root]
+        for fi in frontier:
+            fi.reachable = True
+            fi.reach_via = fi.jit_reason
+        seen = {fi.qualname for fi in frontier}
+        while frontier:
+            fi = frontier.pop()
+            for q in fi.calls:
+                callee = self.functions.get(q)
+                if callee is None or q in seen:
+                    continue
+                seen.add(q)
+                callee.reachable = True
+                callee.loop_body = callee.loop_body or fi.loop_body
+                callee.reach_via = f"called from {fi.name} " \
+                                   f"({fi.reach_via})"
+                frontier.append(callee)
+        # Nested defs inside a reachable function body are traced with it
+        # (they execute, if at all, during the trace).
+        for fi in list(self.functions.values()):
+            if not fi.reachable:
+                continue
+            prefix = fi.qualname + "."
+            for q, nested in self.functions.items():
+                if q.startswith(prefix) and not nested.reachable:
+                    nested.reachable = True
+                    nested.reach_via = f"nested in {fi.name} " \
+                                       f"({fi.reach_via})"
+
+    # -- queries -----------------------------------------------------------
+
+    def reachable_functions(self) -> List[FunctionInfo]:
+        return [fi for fi in self.functions.values() if fi.reachable]
+
+    def module_alias(self, rel: str, module_tail: str) -> Set[str]:
+        """Local aliases bound to a module whose dotted name ends with
+        `module_tail` ('numpy' -> {'np'})."""
+        out = set()
+        for alias, target in self.imports.get(rel, {}).items():
+            if target == module_tail or target.endswith("." + module_tail) \
+                    or target.split(".")[0] == module_tail:
+                if target.split(".")[0] == module_tail or \
+                        target == module_tail:
+                    out.add(alias)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_lint(root: str, repo_root: Optional[str] = None,
+             paths: Optional[Sequence[str]] = None,
+             rule_ids: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint `root` (or explicit `paths`).  Returns unsuppressed findings,
+    including R000 for undocumented pragmas."""
+    from repro.analysis import rules as rulepkg
+    index = PackageIndex.build(root, repo_root=repo_root, paths=paths)
+    findings: List[Finding] = []
+    for rule in rulepkg.all_rules():
+        if rule_ids is not None and rule.ID not in rule_ids:
+            continue
+        findings.extend(rule.run(index))
+    by_rel = {sf.rel: sf for sf in index.files}
+    kept = []
+    for f in findings:
+        sf = by_rel.get(f.path)
+        if sf is not None and sf.suppressed(f.rule, f.line):
+            continue
+        kept.append(f)
+    if rule_ids is None or "R000" in rule_ids:
+        for sf in index.files:
+            kept.extend(sf.pragma_findings())
+    kept.sort(key=lambda f: (f.rule, f.path, f.line))
+    return kept

@@ -1,0 +1,47 @@
+"""Lint rule registry.
+
+Each rule module defines a class with:
+
+* ``ID`` — "R001" ... (stable, used in pragmas and the baseline);
+* ``TITLE`` — short kebab-ish name for tables;
+* ``HINT`` — the generic fix-it hint attached to findings;
+* ``run(index) -> List[Finding]`` — scan a `PackageIndex`.
+
+Rules must be conservative: a finding should mean "this will cost a
+host sync / retrace / upcast", not "this looks unusual".  Anything a
+rule cannot prove is left alone — the jaxpr audit (stage 2) catches
+what static analysis cannot.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.analysis.rules import (r001_host_sync, r002_retrace, r003_prng,
+                                  r004_pallas, r005_dtype)
+
+_RULES = [r001_host_sync.HostSyncRule(),
+          r002_retrace.RetraceRule(),
+          r003_prng.PRNGRule(),
+          r004_pallas.PallasContractRule(),
+          r005_dtype.DtypeRule()]
+
+
+def all_rules():
+    return list(_RULES)
+
+
+def rule_titles() -> Dict[str, str]:
+    titles = {r.ID: r.TITLE for r in _RULES}
+    titles["R000"] = "undocumented-suppression"
+    return titles
+
+
+def rule_catalogue() -> List[str]:
+    """One line per rule for --list-rules / docs."""
+    lines = ["R000 undocumented-suppression: every `# analysis: ignore[..]`"
+             " pragma must carry a written justification"]
+    for r in _RULES:
+        doc = (r.__doc__ or "").strip().splitlines()[0]
+        lines.append(f"{r.ID} {r.TITLE}: {doc}")
+    return lines

@@ -1,0 +1,84 @@
+"""Shared AST helpers for the lint rules."""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Sequence, Set
+
+from repro.analysis.lint import FunctionInfo, PackageIndex, dotted
+
+
+def body_nodes(fi: FunctionInfo, index: PackageIndex,
+               ) -> Iterator[ast.AST]:
+    """Walk a function's subtree without descending into nested defs that
+    the index tracks separately (they are scanned as their own reachable
+    functions, so this avoids duplicate findings)."""
+    tracked = {id(f.node) for q, f in index.functions.items()
+               if q != fi.qualname and q.startswith(fi.qualname + ".")}
+
+    def walk(node: ast.AST) -> Iterator[ast.AST]:
+        for child in ast.iter_child_nodes(node):
+            if id(child) in tracked:
+                continue
+            yield child
+            yield from walk(child)
+
+    yield fi.node
+    yield from walk(fi.node)
+
+
+def attr_root(node: ast.expr) -> Optional[str]:
+    """Root name of an attribute chain: `self.bundle.cfg` -> 'self'."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def is_static_expr(node: ast.expr, static_names: Set[str]) -> bool:
+    """True when `node` provably evaluates to a trace-time constant:
+    literals, names in `static_names`, attribute chains rooted at one,
+    len()/min()/max() and arithmetic over such."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in static_names
+    if isinstance(node, ast.Attribute):
+        root = attr_root(node)
+        return root is not None and root in static_names
+    if isinstance(node, (ast.BinOp,)):
+        return is_static_expr(node.left, static_names) and \
+            is_static_expr(node.right, static_names)
+    if isinstance(node, ast.UnaryOp):
+        return is_static_expr(node.operand, static_names)
+    if isinstance(node, ast.Call):
+        fn = dotted(node.func)
+        if fn in ("len", "min", "max", "abs", "range", "math.ceil",
+                  "math.floor", "math.sqrt", "math.log", "math.prod"):
+            return all(is_static_expr(a, static_names) for a in node.args)
+        return False
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(is_static_expr(e, static_names) for e in node.elts)
+    if isinstance(node, ast.Subscript):
+        return is_static_expr(node.value, static_names)
+    return False
+
+
+def call_tail(node: ast.Call) -> str:
+    fn = dotted(node.func)
+    return fn.split(".")[-1] if fn else ""
+
+
+def literal_int_tuple(node: ast.expr) -> Optional[Sequence[int]]:
+    """(4, 128) -> [4, 128]; None when any element is not an int
+    literal."""
+    try:
+        v = ast.literal_eval(node)
+    except (ValueError, SyntaxError):
+        return None
+    if isinstance(v, int):
+        return [v]
+    if isinstance(v, (tuple, list)) and all(isinstance(x, int) and
+                                            not isinstance(x, bool)
+                                            for x in v):
+        return list(v)
+    return None

@@ -1,0 +1,92 @@
+"""host-sync-in-jit: device->host round-trips reachable from a trace.
+
+Inside a jitted function or a `lax` control-flow body, the following
+force a host sync (ConcretizationTypeError at best, a silent per-step
+dispatch stall at worst — exactly the overhead PR 6 removed from the
+decode loop):
+
+* ``x.item()`` — explicit device->host scalar transfer;
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` on anything that is not a
+  provable trace-time constant (config attributes, literals, shapes);
+* ``np.*(...)`` calls — numpy pulls the array to the host (jit-staged
+  code must use ``jnp``); attribute constants like ``np.float32`` are
+  fine, calls are not;
+* ``print(...)`` — host side effect (use ``jax.debug.print`` outside
+  the hot path, and never in one);
+* ``time.*(...)`` — host clocks cannot time traced code (the trace runs
+  once; wrap timing around the jitted call instead).
+
+Reachability includes helpers: a violation three calls below a
+``fori_loop`` body is still a violation.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import PackageIndex, dotted
+from repro.analysis.rules._common import (attr_root, body_nodes,
+                                          is_static_expr)
+
+_COERCIONS = {"float", "int", "bool", "complex"}
+
+
+class HostSyncRule:
+    """host syncs (`.item()`, coercions, `np.*`, `print`, `time.*`) in
+    jit-reachable code"""
+
+    ID = "R001"
+    TITLE = "host-sync-in-jit"
+    HINT = ("keep the value on device (jnp ops / traced scalars), or "
+            "hoist the host access out of the traced function; suppress "
+            "a trace-time constant with "
+            "# analysis: ignore[R001] <reason>")
+
+    def run(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for fi in index.reachable_functions():
+            np_aliases = index.module_alias(fi.sf.rel, "numpy")
+            time_aliases = index.module_alias(fi.sf.rel, "time")
+            static = set(fi.static_params)
+            where = f"'{fi.name}' ({fi.reach_via})"
+            for node in body_nodes(fi, index):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                msg = hint = None
+                if isinstance(f, ast.Attribute) and f.attr == "item" \
+                        and not node.args:
+                    msg = f".item() in jit-reachable {where}"
+                    hint = ("use the traced value directly; host scalars "
+                            "belong outside the jitted call")
+                elif isinstance(f, ast.Name) and f.id in _COERCIONS:
+                    if len(node.args) == 1 and not is_static_expr(
+                            node.args[0], static):
+                        msg = (f"{f.id}() coercion of a possibly-traced "
+                               f"value in jit-reachable {where}")
+                        hint = (f"jnp.asarray/astype keeps it on device; "
+                                f"{f.id}() forces a host sync")
+                elif isinstance(f, ast.Attribute):
+                    root = attr_root(f)
+                    if root in np_aliases:
+                        msg = (f"numpy call {dotted(f)}() in "
+                               f"jit-reachable {where}")
+                        hint = ("use the jnp equivalent, or suppress if "
+                                "it only touches static config")
+                    elif root in time_aliases:
+                        msg = (f"host clock {dotted(f)}() in "
+                               f"jit-reachable {where}")
+                        hint = ("time around the jitted call (after "
+                                "block_until_ready), not inside it")
+                elif isinstance(f, ast.Name) and f.id == "print":
+                    msg = f"print() in jit-reachable {where}"
+                    hint = ("printing inside a trace runs once at trace "
+                            "time; use jax.debug.print only off the hot "
+                            "path")
+                if msg:
+                    out.append(Finding(rule=self.ID, path=fi.sf.rel,
+                                       line=node.lineno, message=msg,
+                                       hint=hint or self.HINT))
+        return out

@@ -1,0 +1,149 @@
+"""retrace-hazard: shape-/value-dependent Python in traced code.
+
+Every one of these recompiles (or fails) when a traced value changes,
+which is how a "fast" engine quietly becomes a compile farm:
+
+* Python ``if``/``while``/ternary on a traced parameter of a jitted
+  function or a `lax` loop body — branch on traced values with
+  ``jnp.where`` / ``lax.cond`` (``x is None`` checks are fine: they
+  resolve at trace time);
+* f-strings (or ``str()``/``format()``) interpolating a traced
+  parameter — the formatted text embeds a concrete value, forcing a
+  sync and a per-value trace (dict literals keyed on a traced value are
+  the same bug);
+* ``jax.jit(..., static_argnums=<computed>)`` — when the static spec is
+  not a literal the retrace audit cannot reason about it, and arrays
+  accidentally marked static retrace per value (they are also
+  unhashable, which this rule flags as the same hazard).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import PackageIndex, dotted
+from repro.analysis.rules._common import body_nodes
+
+
+def _is_none_check(test: ast.expr) -> bool:
+    if isinstance(test, ast.Compare):
+        all_ops_is = all(isinstance(op, (ast.Is, ast.IsNot))
+                         for op in test.ops)
+        if all_ops_is:
+            return True
+    if isinstance(test, ast.BoolOp):
+        return all(_is_none_check(v) for v in test.values)
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _is_none_check(test.operand)
+    if isinstance(test, ast.Call):
+        # isinstance()/hasattr()/callable() resolve at trace time.
+        fn = dotted(test.func)
+        return fn in ("isinstance", "hasattr", "callable")
+    return False
+
+
+def _traced_names(test: ast.expr, traced: set) -> List[str]:
+    return sorted({n.id for n in ast.walk(test)
+                   if isinstance(n, ast.Name) and n.id in traced})
+
+
+class RetraceRule:
+    """Python branching on traced values, f-strings/dict keys from
+    arrays, computed static_argnums"""
+
+    ID = "R002"
+    TITLE = "retrace-hazard"
+    HINT = ("traced values must stay data: jnp.where / lax.cond for "
+            "branches, device arrays for keys; mark genuinely static "
+            "arguments via literal static_argnums")
+
+    def run(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for fi in index.functions.values():
+            if not fi.reachable:
+                continue
+            # Only functions whose parameters are *known* tracers: a
+            # function passed directly to a lax op (params = carry) or
+            # explicitly jitted (params minus static_argnums).
+            # Heuristic roots (traced contracts) and transitive callees
+            # take static config/spec objects the rule cannot separate
+            # from arrays, so branch checks skip them.
+            if not fi.jit_root:
+                continue
+            if not ("jit" in fi.jit_reason or fi.loop_body):
+                continue
+            traced = {p for p in fi.params
+                      if p not in fi.static_params}
+            if not traced:
+                continue
+            for node in body_nodes(fi, index):
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                    if _is_none_check(test):
+                        continue
+                    names = _traced_names(test, traced)
+                    if names:
+                        kind = ("while" if isinstance(node, ast.While)
+                                else "if")
+                        out.append(Finding(
+                            rule=self.ID, path=fi.sf.rel, line=node.lineno,
+                            message=(f"python `{kind}` on traced "
+                                     f"parameter(s) {', '.join(names)} "
+                                     f"of '{fi.name}' ({fi.reach_via})"),
+                            hint="branch on device: jnp.where for "
+                                 "values, lax.cond for effects"))
+                elif isinstance(node, ast.JoinedStr):
+                    names = sorted({
+                        n.id for v in node.values
+                        if isinstance(v, ast.FormattedValue)
+                        for n in ast.walk(v.value)
+                        if isinstance(n, ast.Name) and n.id in traced})
+                    if names:
+                        out.append(Finding(
+                            rule=self.ID, path=fi.sf.rel, line=node.lineno,
+                            message=(f"f-string interpolates traced "
+                                     f"parameter(s) {', '.join(names)} "
+                                     f"in '{fi.name}'"),
+                            hint="formatting a tracer syncs and bakes "
+                                 "the value into the trace"))
+                elif isinstance(node, ast.Dict):
+                    names = sorted({
+                        k.id for k in node.keys
+                        if isinstance(k, ast.Name) and k.id in traced})
+                    if names:
+                        out.append(Finding(
+                            rule=self.ID, path=fi.sf.rel, line=node.lineno,
+                            message=(f"dict literal keyed on traced "
+                                     f"parameter(s) {', '.join(names)} "
+                                     f"in '{fi.name}'"),
+                            hint="tracer-valued keys hash per concrete "
+                                 "value -> one retrace each"))
+        out.extend(self._static_argnums(index))
+        return out
+
+    def _static_argnums(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in index.files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = dotted(node.func) or ""
+                if fn.split(".")[-1] != "jit":
+                    continue
+                for kw in node.keywords:
+                    if kw.arg not in ("static_argnums", "static_argnames"):
+                        continue
+                    try:
+                        ast.literal_eval(kw.value)
+                    except (ValueError, SyntaxError):
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel, line=node.lineno,
+                            message=(f"computed {kw.arg} on {fn}() — "
+                                     "the static spec must be a "
+                                     "literal"),
+                            hint="spell the indices/names out so the "
+                                 "retrace audit (and readers) can see "
+                                 "what is static"))
+        return out

@@ -1,0 +1,149 @@
+"""prng-discipline: a PRNG key consumed twice without split/fold_in.
+
+JAX keys are not stateful seeds: sampling twice from the same key
+yields identical (correlated) draws.  The rule tracks straight-line key
+usage per function:
+
+* a key variable passed as the first argument to two ``jax.random.*``
+  samplers without an interleaving ``split``/``fold_in`` rebinding is
+  flagged at the second use;
+* a sampler inside a ``for``/``while`` loop whose key is never rebound
+  inside that loop body draws the same numbers every iteration.
+
+``split``/``fold_in``/``PRNGKey`` construct rather than consume; any
+reassignment of the variable clears its used state.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import PackageIndex, dotted
+
+_NON_CONSUMING = {"split", "fold_in", "PRNGKey", "key_data",
+                  "wrap_key_data", "key_impl", "clone", "default_rng"}
+_NP_ROOTS = {"np", "numpy", "onp"}
+
+
+def _random_tails(call: ast.Call) -> Optional[str]:
+    """'normal' for jax.random.normal(...) / random.normal(...) /
+    jr.normal(...); None for non-jax.random calls (numpy's stateful
+    np.random.* is explicitly excluded — its generators are not keys)."""
+    fn = dotted(call.func)
+    if not fn:
+        return None
+    parts = fn.split(".")
+    if parts[0] in _NP_ROOTS:
+        return None
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jr"):
+        # jax.random.x / random.x (from jax import random) / common
+        # aliases.  Guard against python's stdlib random: stdlib
+        # samplers take no key argument, so the first-arg check below
+        # keeps them out anyway.
+        return parts[-1]
+    return None
+
+
+def _first_arg_name(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+def _assigned_names(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    targets = []
+    if isinstance(node, ast.Assign):
+        targets = node.targets
+    elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.For)):
+        targets = [node.target]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+class PRNGRule:
+    """the same jax.random key consumed twice without split/fold_in"""
+
+    ID = "R003"
+    TITLE = "prng-discipline"
+    HINT = ("key, sub = jax.random.split(key) before each consumer; "
+            "fold_in(key, i) inside loops")
+
+    def run(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for fi in index.functions.values():
+            if not isinstance(fi.node, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                continue
+            out.extend(self._check_function(fi))
+        return out
+
+    def _check_function(self, fi) -> List[Finding]:
+        findings: List[Finding] = []
+        used: Set[str] = set()
+        own_defs = {id(n) for n in ast.walk(fi.node)
+                    if isinstance(n, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda))
+                    and n is not fi.node}
+
+        def in_loop_without_rebind(call: ast.Call, key: str,
+                                   loops) -> bool:
+            for loop in loops:
+                rebound = any(
+                    key in _assigned_names(st)
+                    for st in ast.walk(loop)
+                    if isinstance(st, (ast.Assign, ast.AugAssign,
+                                       ast.AnnAssign, ast.For)))
+                if not rebound:
+                    return True
+            return False
+
+        def visit(node: ast.AST, loops) -> None:
+            if id(node) in own_defs:
+                return                      # nested defs: own scope
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.For)):
+                for name in _assigned_names(node):
+                    used.discard(name)
+            if isinstance(node, ast.Call):
+                tail = _random_tails(node)
+                if tail is not None and tail not in _NON_CONSUMING:
+                    key = _first_arg_name(node)
+                    if key is not None:
+                        if key in used:
+                            findings.append(Finding(
+                                rule=self.ID, path=fi.sf.rel,
+                                line=node.lineno,
+                                message=(f"key '{key}' consumed again by "
+                                         f"jax.random.{tail} without an "
+                                         f"interleaving split/fold_in "
+                                         f"in '{fi.name}'"),
+                                hint=self.HINT))
+                        elif in_loop_without_rebind(node, key, loops):
+                            findings.append(Finding(
+                                rule=self.ID, path=fi.sf.rel,
+                                line=node.lineno,
+                                message=(f"key '{key}' consumed by "
+                                         f"jax.random.{tail} every "
+                                         f"iteration of a loop that "
+                                         f"never rebinds it in "
+                                         f"'{fi.name}'"),
+                                hint=self.HINT))
+                        else:
+                            used.add(key)
+            child_loops = loops
+            if isinstance(node, (ast.For, ast.While)):
+                child_loops = loops + [node]
+            for child in ast.iter_child_nodes(node):
+                visit(child, child_loops)
+
+        for stmt in fi.node.body:
+            visit(stmt, [])
+        return findings

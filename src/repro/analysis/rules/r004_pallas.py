@@ -1,0 +1,218 @@
+"""pallas-contract: statically checkable Pallas kernel invariants.
+
+Applies to any module importing ``jax.experimental.pallas``.  Four
+contracts, all checked only where the AST makes them provable (symbolic
+shapes are left to the kernels' own tests):
+
+* **block divisibility** — a ``pl.BlockSpec`` block shape with integer
+  literals must divide the matching literal dims of the call's
+  ``out_shape=jax.ShapeDtypeStruct(...)``; a non-dividing block silently
+  pads/clips tiles on TPU;
+* **program_id range** — ``pl.program_id(a)`` / ``pl.num_programs(a)``
+  axes inside a kernel must be < len(grid) of the ``pallas_call`` that
+  launches it (resolved by name, including through
+  ``functools.partial``);
+* **scalar-prefetch arity** — with
+  ``pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=N, grid=<G-tuple>)``
+  every BlockSpec index_map must take G + N arguments (grid indices
+  first, then the prefetch refs);
+* **memory space** — a bare ``pl.BlockSpec()`` (whole-operand, no block
+  shape) must say where the operand lives: scalar operands need
+  ``memory_space=pltpu.SMEM`` (or scalar prefetch), or the compiler
+  will place them in VMEM/ANY and scalar reads stall the pipeline.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import PackageIndex, SourceFile, dotted
+from repro.analysis.rules._common import literal_int_tuple
+
+
+def _imports_pallas(sf: SourceFile) -> bool:
+    return "pallas" in sf.text and any(
+        isinstance(n, (ast.Import, ast.ImportFrom)) and
+        "pallas" in ast.dump(n)
+        for n in ast.walk(sf.tree))
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _kernel_name(arg: ast.expr) -> Optional[str]:
+    """pallas_call's kernel operand: a Name, or functools.partial(Name,
+    ...)."""
+    if isinstance(arg, ast.Name):
+        return arg.id
+    if isinstance(arg, ast.Call):
+        fn = dotted(arg.func) or ""
+        if fn.split(".")[-1] == "partial" and arg.args:
+            return _kernel_name(arg.args[0])
+    return None
+
+
+def _grid_len(call: ast.Call) -> Optional[int]:
+    """Length of the launch grid: from grid= or
+    grid_spec=PrefetchScalarGridSpec(grid=...)."""
+    grid = _kw(call, "grid")
+    spec = _kw(call, "grid_spec")
+    if grid is None and isinstance(spec, ast.Call):
+        grid = _kw(spec, "grid")
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts)
+    if grid is not None and literal_int_tuple(grid) is not None:
+        return len(literal_int_tuple(grid))
+    return None
+
+
+def _num_prefetch(call: ast.Call) -> int:
+    spec = _kw(call, "grid_spec")
+    if isinstance(spec, ast.Call):
+        fn = dotted(spec.func) or ""
+        if fn.split(".")[-1] == "PrefetchScalarGridSpec":
+            n = _kw(spec, "num_scalar_prefetch")
+            if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                return n.value
+    return 0
+
+
+def _block_specs(call: ast.Call) -> List[ast.Call]:
+    """Every pl.BlockSpec(...) constructed in in_specs/out_specs of the
+    call or its grid_spec."""
+    out = []
+    roots: List[ast.expr] = []
+    for name in ("in_specs", "out_specs"):
+        v = _kw(call, name)
+        if v is not None:
+            roots.append(v)
+    spec = _kw(call, "grid_spec")
+    if isinstance(spec, ast.Call):
+        for name in ("in_specs", "out_specs"):
+            v = _kw(spec, name)
+            if v is not None:
+                roots.append(v)
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call):
+                fn = dotted(node.func) or ""
+                if fn.split(".")[-1] == "BlockSpec":
+                    out.append(node)
+    return out
+
+
+class PallasContractRule:
+    """BlockSpec divisibility, program_id grid range, scalar-prefetch
+    index_map arity, memory-space annotations"""
+
+    ID = "R004"
+    TITLE = "pallas-contract"
+    HINT = "see docs/ANALYSIS.md R004 and /opt/skills/guides pallas notes"
+
+    def run(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in index.files:
+            if not _imports_pallas(sf):
+                continue
+            kernels: Dict[str, ast.AST] = {
+                fi.name: fi.node for fi in index.functions.values()
+                if fi.sf is sf and isinstance(fi.node, ast.FunctionDef)}
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Call) and \
+                        (dotted(node.func) or "").endswith("pallas_call"):
+                    out.extend(self._check_call(sf, node, kernels))
+        return out
+
+    def _check_call(self, sf: SourceFile, call: ast.Call,
+                    kernels: Dict[str, ast.AST]) -> List[Finding]:
+        out: List[Finding] = []
+        grid_len = _grid_len(call)
+        n_prefetch = _num_prefetch(call)
+
+        # -- block divisibility against literal out_shape dims ------------
+        out_shape = _kw(call, "out_shape")
+        out_dims = None
+        if isinstance(out_shape, ast.Call) and \
+                (dotted(out_shape.func) or "").endswith("ShapeDtypeStruct") \
+                and out_shape.args:
+            out_dims = literal_int_tuple(out_shape.args[0])
+        specs = _block_specs(call)
+        out_spec = _kw(call, "out_specs")
+        spec_node = _kw(call, "grid_spec")
+        if out_spec is None and isinstance(spec_node, ast.Call):
+            out_spec = _kw(spec_node, "out_specs")
+        if out_dims is not None and isinstance(out_spec, ast.Call) and \
+                (dotted(out_spec.func) or "").endswith("BlockSpec") and \
+                out_spec.args:
+            block = literal_int_tuple(out_spec.args[0])
+            if block is not None and len(block) == len(out_dims):
+                for d, (dim, blk) in enumerate(zip(out_dims, block)):
+                    if blk > 0 and dim % blk != 0:
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel,
+                            line=out_spec.lineno,
+                            message=(f"out BlockSpec block {tuple(block)} "
+                                     f"does not divide declared shape "
+                                     f"{tuple(out_dims)} on axis {d} "
+                                     f"({dim} % {blk} != 0)"),
+                            hint="pad the array or pick a dividing "
+                                 "block; TPU tiles must cover exactly"))
+
+        # -- scalar-prefetch index_map arity ------------------------------
+        if grid_len is not None:
+            expect = grid_len + n_prefetch
+            for bs in specs:
+                if len(bs.args) >= 2 and isinstance(bs.args[1],
+                                                    ast.Lambda):
+                    lam = bs.args[1]
+                    got = len(lam.args.args) + len(lam.args.posonlyargs)
+                    if not lam.args.vararg and got != expect:
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel, line=bs.lineno,
+                            message=(f"BlockSpec index_map takes {got} "
+                                     f"args but grid({grid_len}) + "
+                                     f"scalar_prefetch({n_prefetch}) "
+                                     f"= {expect}"),
+                            hint="index_map receives grid indices then "
+                                 "every scalar-prefetch ref, in order"))
+
+        # -- bare BlockSpec needs a memory space --------------------------
+        for bs in specs:
+            if not bs.args and not any(kw.arg == "memory_space"
+                                       for kw in bs.keywords):
+                out.append(Finding(
+                    rule=self.ID, path=sf.rel, line=bs.lineno,
+                    message="whole-operand BlockSpec without "
+                            "memory_space annotation",
+                    hint="scalar operands need "
+                         "pl.BlockSpec(memory_space=pltpu.SMEM) or "
+                         "PrefetchScalarGridSpec scalar prefetch"))
+
+        # -- program_id axes within the launch grid -----------------------
+        kname = _kernel_name(call.args[0]) if call.args else None
+        if kname and grid_len is not None and kname in kernels:
+            for node in ast.walk(kernels[kname]):
+                if isinstance(node, ast.Call):
+                    fn = dotted(node.func) or ""
+                    if fn.split(".")[-1] in ("program_id",
+                                             "num_programs") and \
+                            node.args and \
+                            isinstance(node.args[0], ast.Constant) and \
+                            isinstance(node.args[0].value, int) and \
+                            node.args[0].value >= grid_len:
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel, line=node.lineno,
+                            message=(f"{fn.split('.')[-1]}"
+                                     f"({node.args[0].value}) but the "
+                                     f"launch grid of '{kname}' has "
+                                     f"only {grid_len} axis"
+                                     f"{'es' if grid_len != 1 else ''}"),
+                            hint="grid axes are 0-indexed; add the axis "
+                                 "to the grid or fix the index"))
+        return out

@@ -1,0 +1,112 @@
+"""dtype-hygiene: float64 that would upcast on-device buffers.
+
+JAX defaults to float32 (x64 disabled); numpy defaults to float64.
+Mixing them silently doubles memory traffic wherever an f64 constant
+meets a device buffer (or truncates, depending on x64 config — both
+wrong for a measured hot path).  Flagged:
+
+* ``jnp.float64`` anywhere (there is no good reason in this codebase);
+* ``dtype=np.float64`` / ``dtype="float64"`` / ``dtype=float`` passed
+  to a ``jnp.*`` / ``jax.numpy.*`` constructor — python's ``float``
+  *is* ``np.float64`` as a dtype;
+* ``np.float64`` or ``.astype(float)`` / ``.astype("float64")`` inside
+  jit-reachable code (host-side f64 accounting in numpy is fine — the
+  rule only polices code that feeds the device);
+* ``jax.config.update("jax_enable_x64", True)`` in library code —
+  an application/test may flip it, the library must not.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.lint import PackageIndex, dotted
+from repro.analysis.rules._common import body_nodes
+
+
+def _is_f64_expr(node: ast.expr) -> bool:
+    """np.float64 / jnp.float64 / "float64" / float-the-builtin."""
+    d = dotted(node)
+    if d is not None:
+        if d.split(".")[-1] == "float64":
+            return True
+        if d == "float":
+            return True
+    if isinstance(node, ast.Constant) and node.value == "float64":
+        return True
+    return False
+
+
+class DtypeRule:
+    """float64 literals/defaults that upcast on-device buffers"""
+
+    ID = "R005"
+    TITLE = "dtype-hygiene"
+    HINT = ("use jnp.float32 (or the model's configured dtype); keep "
+            "f64 on the host side of the measurement boundary")
+
+    def run(self, index: PackageIndex) -> List[Finding]:
+        out: List[Finding] = []
+        for sf in index.files:
+            jnp_aliases = index.module_alias(sf.rel, "jax") | {"jnp"}
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.Attribute) and \
+                        node.attr == "float64":
+                    root = dotted(node) or ""
+                    if root.startswith("jnp.") or \
+                            root.startswith("jax.numpy."):
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel, line=node.lineno,
+                            message="jnp.float64 — x64 is disabled by "
+                                    "default and the hot path is f32",
+                            hint=self.HINT))
+                elif isinstance(node, ast.Call):
+                    fn = dotted(node.func) or ""
+                    root = fn.split(".")[0]
+                    is_jnp = root in jnp_aliases and (
+                        ".numpy." in f".{fn}." or root == "jnp")
+                    if is_jnp:
+                        for kw in node.keywords:
+                            if kw.arg == "dtype" and \
+                                    _is_f64_expr(kw.value):
+                                out.append(Finding(
+                                    rule=self.ID, path=sf.rel,
+                                    line=node.lineno,
+                                    message=(f"dtype=float64 passed to "
+                                             f"{fn}() — device buffers "
+                                             f"must stay f32"),
+                                    hint=self.HINT))
+                    if fn.endswith("config.update") and node.args and \
+                            isinstance(node.args[0], ast.Constant) and \
+                            node.args[0].value == "jax_enable_x64":
+                        out.append(Finding(
+                            rule=self.ID, path=sf.rel, line=node.lineno,
+                            message="library code flips jax_enable_x64 "
+                                    "— that is an application/test "
+                                    "decision",
+                            hint="gate it behind the caller, not the "
+                                 "library import"))
+        # Inside jit-reachable code, host-numpy f64 is also a violation.
+        for fi in index.reachable_functions():
+            for node in body_nodes(fi, index):
+                msg = None
+                if isinstance(node, ast.Attribute) and \
+                        node.attr == "float64" and \
+                        not (dotted(node) or "").startswith(
+                            ("jnp.", "jax.numpy.")):
+                    # jnp.float64 is already flagged module-wide above.
+                    msg = (f"np.float64 in jit-reachable '{fi.name}' "
+                           f"({fi.reach_via})")
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "astype" and node.args and \
+                        _is_f64_expr(node.args[0]):
+                    msg = (f".astype(float64) in jit-reachable "
+                           f"'{fi.name}' ({fi.reach_via})")
+                if msg:
+                    out.append(Finding(rule=self.ID, path=fi.sf.rel,
+                                       line=node.lineno, message=msg,
+                                       hint=self.HINT))
+        return out

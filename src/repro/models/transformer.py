@@ -293,9 +293,10 @@ def _split_layers(cfg: TransformerConfig, layers: Params,
     """Split stacked layer params into (global_stack, local_stack) plus the
     index vectors mapping group position -> original layer index."""
     import numpy as np
+    # analysis: ignore[R001] trace-time constants from static cfg.is_local, not a device sync
     locals_ = np.asarray(cfg.is_local)
-    gidx = np.nonzero(~locals_)[0]
-    lidx = np.nonzero(locals_)[0]
+    gidx = np.nonzero(~locals_)[0]  # analysis: ignore[R001] same static-cfg constant fold
+    lidx = np.nonzero(locals_)[0]  # analysis: ignore[R001] same static-cfg constant fold
     g = jax.tree.map(lambda a: a[gidx], layers) if len(gidx) else None
     l = jax.tree.map(lambda a: a[lidx], layers) if len(lidx) else None
     return g, l, jnp.asarray(gidx), jnp.asarray(lidx)

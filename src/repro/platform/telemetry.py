@@ -42,6 +42,9 @@ def _check_arrival_rate(arrival_rate: float) -> None:
     # lambda <= 0 means "requests never arrive": the accumulation wait is
     # undefined (division by zero) or negative, which would silently poison
     # every latency/cost downstream.  Fail at the seam with a clear message.
+    # Mirrors serving.queueing.require_positive_rate — the environments'
+    # constructor-time guard — which this layer cannot import (platform
+    # must stay below serving in the dependency order).
     if arrival_rate <= 0:
         raise ValueError(
             f"arrival_rate must be positive (requests/s), got "

@@ -70,6 +70,7 @@ from repro.models.registry import ModelBundle
 from repro.obs import EnergyMeter, make_sensor
 from repro.obs import tracing as obslog
 from repro.platform import BaseEnvironment, DVFSPlatform, Observation, observe
+from repro.serving.queueing import require_positive_rate
 from repro.serving.requests import ArrivalProcess
 from repro.serving.scheduler import (EngineRequest, RequestQueue,
                                      RequestRecord, SlotScheduler,
@@ -628,14 +629,11 @@ class EngineEnvironment(BaseEnvironment):
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"scheduler must be 'static' or 'continuous', "
                              f"got {scheduler!r}")
-        if arrival_rate <= 0:
-            raise ValueError(f"arrival_rate must be > 0, "
-                             f"got {arrival_rate}")
         self.engine = engine
         self.board = board
         self.work = work
         self.platform = DVFSPlatform(board)
-        self.arrival_rate = arrival_rate
+        self.arrival_rate = require_positive_rate(arrival_rate)
         self.prompt_len = prompt_len
         self.max_new_tokens = max_new_tokens
         self.scheduler = scheduler

@@ -5,9 +5,34 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Deque, List, Optional
 
 from repro.serving.requests import Request
+
+
+def require_positive_rate(value: float, knob: str = "arrival_rate",
+                          unit: str = "requests/s") -> float:
+    """Validate a rate-like knob that the queueing model divides by.
+
+    Every serving environment ultimately computes ``wait ~ b / (2*rate)``
+    and ``backlog ~ t_b - b / rate``; a zero, negative, NaN or infinite
+    rate turns those into nonsense (or a ZeroDivisionError deep inside a
+    jitted landscape).  Raises TypeError for non-numeric input and
+    ValueError naming the offending knob otherwise; returns the value
+    as a float.
+    """
+    try:
+        v = float(value)
+    except (TypeError, ValueError):
+        raise TypeError(
+            f"{knob} must be a positive real ({unit}), got "
+            f"{value!r}") from None
+    if not math.isfinite(v) or v <= 0:
+        raise ValueError(
+            f"{knob} must be a positive, finite {unit} value — the "
+            f"queueing model divides by it — got {value!r}")
+    return v
 
 
 @dataclasses.dataclass

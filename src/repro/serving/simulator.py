@@ -38,7 +38,7 @@ from repro.core.arms import ArmSpace
 from repro.platform import (BaseEnvironment, DVFSPlatform, Observation,
                             TPUPlatform, observe)
 from repro.serving.energy import DVFSBoard, WorkloadModel
-from repro.serving.queueing import FIFOBatcher
+from repro.serving.queueing import FIFOBatcher, require_positive_rate
 from repro.serving.requests import ArrivalProcess, Request
 
 
@@ -117,7 +117,7 @@ class LandscapeEnv(BaseEnvironment):
         self.board = board
         self.work = work
         self.platform = DVFSPlatform(board)
-        self.arrival_rate = arrival_rate
+        self.arrival_rate = require_positive_rate(arrival_rate)
         self.n_requests = n_requests
         self.noise = noise
         self.rng = np.random.default_rng(seed)
@@ -198,7 +198,7 @@ class TPULandscapeEnv(BaseEnvironment):
         self.platform = TPUPlatform(chip)
         self.tokens_out = tokens_out
         self.prompt_len = prompt_len
-        self.arrival_rate = arrival_rate
+        self.arrival_rate = require_positive_rate(arrival_rate)
         self.n_requests = n_requests
         self.noise = noise
         self.rng = np.random.default_rng(seed)
@@ -430,7 +430,8 @@ class EventEnvironment(BaseEnvironment):
         self.board = board
         self.work = work
         self.platform = DVFSPlatform(board)
-        self.interval_s = interval_s
+        self.interval_s = require_positive_rate(
+            interval_s, knob="interval_s", unit="seconds/request")
         self.requests_per_pull = requests_per_pull
         self.noise = noise
         self.seed = seed

@@ -1,0 +1,38 @@
+"""Lint fixture: host syncs inside jit-reachable code (R001).
+
+Lines carrying an `# EXPECT: <rule>` marker must be flagged with exactly
+that rule id; the test asserts the (rule, line) sets match.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def syncs_everywhere(x):
+    total = x.sum().item()                 # EXPECT: R001
+    scale = float(x[0])                    # EXPECT: R001
+    host = np.log(np.asarray([scale]))     # EXPECT: R001,R001
+    print(total)                           # EXPECT: R001
+    time.sleep(0.001)                      # EXPECT: R001
+    return x * jnp.asarray(host)
+
+
+def helper(x):
+    # Reachable only through the call below, so the same discipline
+    # applies transitively.
+    return np.abs(x)                       # EXPECT: R001
+
+
+@jax.jit
+def calls_helper(x):
+    return helper(x)
+
+
+def host_side(x):
+    # Not jit-reachable: host numpy and prints are fine here.
+    print(np.mean(x))
+    return float(np.mean(x))

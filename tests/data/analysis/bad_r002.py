@@ -1,0 +1,40 @@
+"""Lint fixture: retrace hazards (R002) — python control flow on traced
+values, f-strings over tracers, computed static_argnums."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branches_on_tracer(x, flag):
+    if flag:                               # EXPECT: R002
+        x = x + 1
+    while x.sum() > 0:                     # EXPECT: R002
+        x = x - 1
+    y = x * 2 if flag else x               # EXPECT: R002
+    label = f"x={x}"                       # EXPECT: R002
+    table = {flag: label}                  # EXPECT: R002
+    return x, table
+
+
+@jax.jit
+def fine(x, other=None):
+    if other is None:                      # trace-time: not flagged
+        other = jnp.zeros_like(x)
+    if isinstance(other, tuple):           # trace-time: not flagged
+        other = other[0]
+    return jnp.where(x > 0, x, other)
+
+
+def loop_body(i, carry):
+    if carry > 0:                          # EXPECT: R002
+        return carry - i
+    return carry
+
+
+def run(n):
+    return jax.lax.fori_loop(0, n, loop_body, 1.0)
+
+
+_STATIC = tuple(range(1))
+jitted = jax.jit(fine, static_argnums=_STATIC)  # EXPECT: R002

@@ -1,0 +1,33 @@
+"""Lint fixture: PRNG key discipline (R003) — a key consumed twice
+without split/fold_in draws correlated samples."""
+
+import jax
+import numpy as np
+
+
+def sample_twice(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))      # EXPECT: R003
+    return a + b
+
+
+def loop_reuse(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.normal(key, ())  # EXPECT: R003
+    return total
+
+
+def disciplined(key, n):
+    key, sub = jax.random.split(key)
+    a = jax.random.normal(sub, (4,))
+    for i in range(n):
+        step = jax.random.fold_in(key, i)
+        a = a + jax.random.normal(step, (4,))
+    return a
+
+
+def host_rng(seed):
+    # numpy's stateful generator is not a JAX key: not flagged.
+    rng = np.random.default_rng(seed)
+    return rng.normal() + rng.normal()

@@ -1,0 +1,38 @@
+"""Lint fixture: Pallas kernel contract violations (R004)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)                   # EXPECT: R004
+    o_ref[...] = x_ref[...] * (i + j)
+
+
+def bad_launch(x):
+    return pl.pallas_call(
+        kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i, j: (i, j))],  # EXPECT: R004
+        out_specs=pl.BlockSpec((7, 128), lambda i: (i, 0)),      # EXPECT: R004
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(x)
+
+
+def scale_kernel(s_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...] * s_ref[0]
+
+
+def bare_spec(x, s):
+    return pl.pallas_call(
+        functools.partial(scale_kernel),
+        grid=(2,),
+        in_specs=[pl.BlockSpec(),                                # EXPECT: R004
+                  pl.BlockSpec((16, 128), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((16, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(s, x)

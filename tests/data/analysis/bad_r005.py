@@ -1,0 +1,23 @@
+"""Lint fixture: float64 / x64 hygiene (R005)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)          # EXPECT: R005
+
+WIDE = jnp.float64                                 # EXPECT: R005
+
+
+def widened():
+    return jnp.zeros((4,), dtype=np.float64)       # EXPECT: R005
+
+
+@jax.jit
+def upcast(x):
+    return x.astype("float64")                     # EXPECT: R005
+
+
+def host_accounting(xs):
+    # Host-side f64 accumulation outside jit is fine.
+    return np.asarray(xs, np.float64).sum()

@@ -1,0 +1,16 @@
+"""Lint fixture: suppression pragmas (documented vs undocumented)."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def folded(x):
+    # A documented pragma suppresses the finding on its line.
+    table = np.asarray([1, 2, 3])  # analysis: ignore[R001] trace-time constant table
+    # A pragma on its own comment line covers the next line.
+    # analysis: ignore[R001] static shape arithmetic, not a sync
+    steps = np.asarray([0, 1])
+    # An undocumented pragma suppresses nothing and is itself R000.
+    bad = np.ones(2)  # analysis: ignore[R001]
+    return x + table.shape[0] + steps.shape[0] + bad.shape[0]

@@ -12,6 +12,12 @@ and renders:
 * the run-level sensor measurement, when a non-simulated sensor ran.
 
     python tools/trace_report.py out.jsonl [more.jsonl ...]
+    python tools/trace_report.py out.jsonl --analysis analysis_report.json
+
+``--analysis`` joins the static-analyzer verdict (the JSON written by
+``python -m repro.analysis --check --json ...``) into the report, so one
+artifact answers both "how did the run perform" and "is the hot path
+still trace-clean".
 
 The input is plain JSONL (see docs/TELEMETRY.md for the schema), so any
 other tool — jq, pandas, a notebook — can query the same file; this
@@ -186,7 +192,46 @@ def sensor_lines(rows: List[dict]) -> List[str]:
             f"({a.get('n_samples')} samples)"]
 
 
-def report(path: str) -> str:
+def analysis_lines(path: str) -> List[str]:
+    """Render the analyzer verdict from a `python -m repro.analysis
+    --json` report: pass/fail, findings by rule, and any budget rows
+    that drifted from their recorded observation."""
+    try:
+        with open(path) as fh:
+            rep = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        return ["", f"analysis report {path}: unreadable ({e})"]
+    findings = rep.get("findings", [])
+    budgets = rep.get("budgets", {})
+    by_rule: Dict[str, int] = defaultdict(int)
+    for f in findings:
+        by_rule[f.get("rule", "?")] += 1
+    verdict = "CLEAN" if not findings else \
+        f"{len(findings)} finding(s)"
+    lines = ["", f"static analysis ({path}): {verdict}"]
+    for rule in sorted(by_rule):
+        lines.append(f"  {rule}: {by_rule[rule]}")
+    for f in findings[:16]:
+        loc = (f"{f.get('path')}:{f.get('line')}" if f.get("path")
+               else f"<{f.get('entry', '?')}>")
+        lines.append(f"    {f.get('rule')} {loc}  {f.get('message')}")
+    if len(findings) > 16:
+        lines.append(f"    ... {len(findings) - 16} more")
+    drift = {e: b for e, b in budgets.items()
+             if b.get("status") not in (None, "ok")}
+    if drift:
+        lines.append("  budget status (non-ok rows):")
+        for entry in sorted(drift):
+            b = drift[entry]
+            lines.append(f"    {entry:<40} count={b.get('count')} "
+                         f"observed={b.get('observed')} "
+                         f"budget={b.get('budget')} [{b.get('status')}]")
+    elif budgets:
+        lines.append(f"  jaxpr budgets: {len(budgets)} entries, all ok")
+    return lines
+
+
+def report(path: str, analysis: Optional[str] = None) -> str:
     rows = load_rows(path)
     counts = defaultdict(int)
     for r in rows:
@@ -198,15 +243,26 @@ def report(path: str) -> str:
     lines += span_table(rows)
     lines += sensor_lines(rows)
     lines += metric_table(rows)
+    if analysis:
+        lines += analysis_lines(analysis)
     return "\n".join(lines)
 
 
 def main(argv: List[str]) -> int:
+    analysis = None
+    if "--analysis" in argv:
+        i = argv.index("--analysis")
+        if i + 1 >= len(argv):
+            print("--analysis needs the analyzer JSON path")
+            return 2
+        analysis = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
     if not argv:
-        print("usage: trace_report.py <trace.jsonl> ...")
+        print("usage: trace_report.py <trace.jsonl> ... "
+              "[--analysis report.json]")
         return 2
     for path in argv:
-        print(report(path))
+        print(report(path, analysis=analysis))
     return 0
 
 
