@@ -1,0 +1,268 @@
+"""E14 — fault injection + graceful degradation (repro.faults).
+
+Three claims about the resilient serving stack, asserted here and
+regression-tested in tests/test_faults.py:
+
+* **Zero-fault bit-identity** — wrapping a run in a `FaultPlan` that
+  never fires must be a strict no-op.  Two flavours: the zero plan
+  (wrap_env passes the env through untouched) and a deadline-only plan
+  (the FaultyFleet + resilient-dispatcher path is ACTIVE — deadline
+  checks, fault hook, healthy-candidate filtering — but no fault ever
+  fires), both compared record-for-record against the bare async run.
+  The engine path gets the same treatment: an `EngineEnvironment`
+  handed the zero plan must produce a bit-identical Observation.
+
+* **Chaos convergence** — a 4x Jetson async fleet under
+  ``pull_fail=0.2,crash=0@4,deadline=4,retries=3`` (20% of dispatched
+  attempts fail, device 0 crashes permanently at round 4) still runs
+  its full pull budget (failed pulls are delivered as censored
+  completions, so the budget loop terminates) and commits an arm whose
+  fleet-expected cost is within `TOL` (5%) of the fault-free run's
+  commit.
+
+* **Hung-device recovery** — a device with an infinite dispatch factor
+  (its pulls would never be delivered) no longer stalls `pop_wave`:
+  with a per-pull deadline its pull times out, the worker is
+  quarantined, the arm re-dispatches to a healthy device, and the run
+  completes its exact budget.
+
+``python -m benchmarks.resilience`` emits the sweep as JSON and writes
+``BENCH_resilience.json`` for the CI artifact; ``--e14-smoke`` runs the
+single-seed variant (the CI smoke job).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import math
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro import obs as obs_mod
+from repro.core import baselines, controller, cost, priors
+from repro.faults import FaultPlan, parse_faults, wrap_env
+from repro.platform import make_env, make_space
+
+FLEET_NAME = "fleet/4xjetson/llama3.2-1b/landscape"
+N_DEVICES = 4
+K = 4
+PULLS = 64
+SEEDS = (0, 1, 2)
+TOL = 0.05                   # commit cost within 5% of fault-free
+CHAOS_SPEC = "pull_fail=0.2,crash=0@4,deadline=4,retries=3,seed=1"
+CENSORED_SPEC = "pull_fail=0.35,crash=0@4,deadline=4,retries=1,seed=1"
+ENGINE_NAME = "engine/smollm-360m"
+OUT_JSON = os.environ.get("BENCH_RESILIENCE_JSON", "BENCH_resilience.json")
+
+
+def _fleet_setup(seed: int, dispatch_factors=None):
+    kw = dict(noise=0.03, seed=seed)
+    if dispatch_factors is not None:
+        kw["dispatch_factors"] = dispatch_factors
+    env = make_env(FLEET_NAME, **kw)
+    space = make_space(FLEET_NAME)
+    cm = cost.CostModel(alpha=0.5)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected,
+                                                     cm)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    return kw, env, space, cm, opt_cost, mu0, sig0
+
+
+def _async_run(kw, space, cm, opt_cost, mu0, sig0, seed, pulls,
+               plan=None):
+    """One AsyncController run on a fresh env, optionally fault-wrapped.
+    Returns the ControllerResult."""
+    env = make_env(FLEET_NAME, **kw)
+    if plan is not None:
+        env = wrap_env(env, plan)
+    pol = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    ctrl = controller.AsyncController(space, pol, cm,
+                                      optimal_cost=opt_cost, seed=seed,
+                                      k=K)
+    return ctrl.run(env, max(1, math.ceil(pulls / K)), pull_budget=pulls)
+
+
+def _stream(res) -> list:
+    """The full per-record identity tuple (bit-identity comparisons)."""
+    return [(r.t, r.arm, r.cost, r.energy, r.latency,
+             r.obs.metadata["device"], r.obs.metadata["staleness"],
+             r.obs.metadata["finished_at"]) for r in res.records]
+
+
+def zero_fault_identity(seeds=SEEDS) -> dict:
+    """Bare run vs zero-plan wrap vs deadline-only wrap (resilient
+    dispatcher active, nothing fires): all three record streams must be
+    bit-identical."""
+    # Huge deadline + retries: every resilience code path is live but no
+    # fault can fire, so selection order and numerics may not move.
+    armed = parse_faults("deadline=1e9,retries=3")
+    assert not armed.is_zero and FaultPlan().is_zero
+    for seed in seeds:
+        kw, _, space, cm, opt_cost, mu0, sig0 = _fleet_setup(seed)
+        bare = _stream(_async_run(kw, space, cm, opt_cost, mu0, sig0,
+                                  seed, PULLS))
+        zero = _stream(_async_run(kw, space, cm, opt_cost, mu0, sig0,
+                                  seed, PULLS, plan=FaultPlan()))
+        idle = _stream(_async_run(kw, space, cm, opt_cost, mu0, sig0,
+                                  seed, PULLS, plan=armed))
+        assert bare == zero, \
+            f"zero-plan wrap perturbed the run (seed {seed})"
+        assert bare == idle, \
+            f"idle resilient dispatcher perturbed the run (seed {seed})"
+    return {"seeds": list(seeds), "records_per_run": PULLS,
+            "identical": True}
+
+
+def chaos_convergence(seeds=SEEDS) -> dict:
+    """20% pull failures + one crashed device: full budget still runs
+    and the commit stays within TOL of the fault-free commit cost.
+
+    Two chaos flavours per seed: the headline spec (retries=3 — most
+    injected faults are absorbed by retry/re-dispatch, so we assert the
+    injection through the metrics registry) and a no-retry spec
+    (retries=1 — terminal failures surface as censored `FailedPull`
+    records, exercising the controller's censored-update path)."""
+    cells = []
+    for seed in seeds:
+        kw, env, space, cm, opt_cost, mu0, sig0 = _fleet_setup(seed)
+
+        def commit_cost(arm: int) -> float:
+            return float(cm.cost(*env.expected(space.values(arm))))
+
+        clean = _async_run(kw, space, cm, opt_cost, mu0, sig0, seed,
+                           PULLS)
+        c_clean = commit_cost(clean.best_arm)
+        for label, spec, want_failed in (
+                ("retry", CHAOS_SPEC, False),
+                ("censored", CENSORED_SPEC, True)):
+            plan = parse_faults(spec)
+            with obs_mod.observing(None) as sess:
+                chaos = _async_run(kw, space, cm, opt_cost, mu0, sig0,
+                                   seed, PULLS, plan=plan)
+            injected = sess.metrics.counter("faults_injected_total").value
+            n_failed = len(chaos.failed_pulls)
+            assert injected > 0, \
+                f"chaos run ({label}) injected no faults"
+            if want_failed:
+                assert n_failed > 0, \
+                    "no-retry chaos produced no censored FailedPulls"
+            assert len(chaos.records) + n_failed == PULLS, (
+                f"budget leak ({label}): {len(chaos.records)} ok + "
+                f"{n_failed} failed != {PULLS}")
+            c_chaos = commit_cost(chaos.best_arm)
+            excess = c_chaos / c_clean - 1.0
+            cells.append({"seed": seed, "variant": label,
+                          "faults_injected": injected,
+                          "failed_pulls": n_failed,
+                          "ok_pulls": len(chaos.records),
+                          "retries": sess.metrics.counter(
+                              "retries_total").value,
+                          "clean_commit_cost": c_clean,
+                          "chaos_commit_cost": c_chaos,
+                          "excess": excess})
+            assert excess <= TOL, (
+                f"chaos ({label}) commit cost {c_chaos:.4f} is "
+                f"{excess:.1%} over the fault-free commit {c_clean:.4f} "
+                f"(seed {seed}, tol {TOL:.0%})")
+    return {"spec": CHAOS_SPEC, "censored_spec": CENSORED_SPEC,
+            "tol": TOL, "cells": cells,
+            "max_excess": max(c["excess"] for c in cells)}
+
+
+def hung_device(seed: int = 0) -> dict:
+    """An infinite dispatch factor used to stall `pop_wave` forever; the
+    per-pull deadline turns it into a timeout + quarantine + re-dispatch
+    (absorbed by retry, so it shows in the trace rather than in
+    `failed_pulls`) and the run completes its exact budget."""
+    factors = (float("inf"),) + (1.0,) * (N_DEVICES - 1)
+    kw, _, space, cm, opt_cost, mu0, sig0 = _fleet_setup(
+        seed, dispatch_factors=factors)
+    plan = parse_faults("deadline=4,retries=3")
+    sink = io.StringIO()
+    with obs_mod.observing(sink):
+        res = _async_run(kw, space, cm, opt_cost, mu0, sig0, seed, PULLS,
+                         plan=plan)
+    rows = [json.loads(line) for line in sink.getvalue().splitlines()]
+    timeouts = [r for r in rows if r["name"] == "fault.pull"
+                and r.get("attrs", {}).get("reason") == "timeout"]
+    quarantines = [r for r in rows if r["name"] == "fault.device"]
+    assert len(res.records) + len(res.failed_pulls) == PULLS, (
+        f"hung device stalled the budget loop: {len(res.records)} ok + "
+        f"{len(res.failed_pulls)} failed != {PULLS}")
+    assert timeouts and all(t["attrs"]["worker"] == 0 for t in timeouts), (
+        f"expected device-0 timeouts, got "
+        f"{[t.get('attrs') for t in timeouts]}")
+    assert quarantines and quarantines[0]["attrs"]["worker"] == 0
+    healthy = {r.obs.metadata["device"] for r in res.records}
+    assert 0 not in healthy, "a completed pull came from the hung device"
+    return {"budget": PULLS, "ok_pulls": len(res.records),
+            "timeouts": len(timeouts),
+            "devices_served": sorted(healthy)}
+
+
+def engine_zero_fault(seed: int = 0) -> dict:
+    """EngineEnvironment handed the zero plan vs no plan: the workload
+    (requests, deadlines) and the generated token streams must be
+    bit-identical, record for record.  Timing runs on the deterministic
+    step clock (`step_time_s=1.0`) — wall-clock energy is host noise and
+    is outside the identity contract."""
+    ekw = dict(seed=seed, prompt_len=8, max_new_tokens=4,
+               sensor="simulated", scheduler="continuous",
+               requests_per_pull=4, max_batch=4, max_seq_len=64)
+    streams = []
+    for plan in (None, FaultPlan()):
+        env = make_env(ENGINE_NAME, faults=plan, **ekw)
+        reqs = env._continuous_workload(0)
+        assert all(r.deadline_s is None for r in reqs)
+        out, st = env.engine.generate_continuous(reqs, n_slots=4,
+                                                 step_time_s=1.0)
+        assert st.n_cancelled == 0
+        streams.append([(r.rid, r.prompt.tolist(), r.max_new_tokens,
+                         r.arrival_s, out[r.rid].tolist())
+                        for r in reqs])
+    assert streams[0] == streams[1], \
+        "engine zero-plan run diverged from the bare run"
+    n_tokens = sum(len(t[-1]) for t in streams[0])
+    return {"arch": ENGINE_NAME, "identical": True, "tokens": n_tokens}
+
+
+def run(seeds=SEEDS) -> list:
+    rows: list[Row] = []
+    ident = zero_fault_identity(seeds)
+    rows.append(("resilience_zero_fault_identity", 0.0,
+                 f"seeds={len(ident['seeds'])} identical=True"))
+    conv = chaos_convergence(seeds)
+    rows.append(("resilience_chaos_convergence", 0.0,
+                 f"max_excess={conv['max_excess']:.3f} (tol {TOL}) "
+                 f"failed={[c['failed_pulls'] for c in conv['cells']]}"))
+    hung = hung_device(seeds[0])
+    rows.append(("resilience_hung_device", 0.0,
+                 f"ok={hung['ok_pulls']}/{hung['budget']} "
+                 f"timeouts={hung['timeouts']} "
+                 f"devices={hung['devices_served']}"))
+    eng = engine_zero_fault(seeds[0])
+    rows.append(("resilience_engine_zero_fault", 0.0,
+                 f"identical=True tokens={eng['tokens']}"))
+    with open(OUT_JSON, "w") as f:
+        json.dump({"zero_fault_identity": ident,
+                   "chaos_convergence": conv,
+                   "hung_device": hung,
+                   "engine_zero_fault": eng}, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    seeds = SEEDS[:1] if "--e14-smoke" in sys.argv else SEEDS
+    out = {"zero_fault_identity": zero_fault_identity(seeds),
+           "chaos_convergence": chaos_convergence(seeds),
+           "hung_device": hung_device(seeds[0]),
+           "engine_zero_fault": engine_zero_fault(seeds[0])}
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=2)
+    print(json.dumps(out, indent=2))

@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows per module:
     E13 engine_continuous  continuous vs static batching goodput under
                       Poisson arrivals with ragged output lengths, plus
                       EOS early-exit (writes BENCH_continuous.json)
+    E14 resilience    fault injection + graceful degradation: zero-fault
+                      bit-identity, chaos-run convergence within 5% of
+                      fault-free, hung-device deadline recovery (writes
+                      BENCH_resilience.json)
 """
 
 from __future__ import annotations
@@ -34,8 +38,8 @@ import traceback
 def main() -> None:
     from benchmarks import (ablations, config_search, engine_continuous,
                             engine_throughput, fleet_scaling, kernels,
-                            landscape, roofline, sensitivity, tpu_serving,
-                            validation)
+                            landscape, resilience, roofline, sensitivity,
+                            tpu_serving, validation)
 
     modules = [
         ("E1_landscape", landscape),
@@ -49,6 +53,7 @@ def main() -> None:
         ("E10_E11_fleet_scaling", fleet_scaling),
         ("E12_engine_throughput", engine_throughput),
         ("E13_engine_continuous", engine_continuous),
+        ("E14_resilience", resilience),
     ]
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("filters", nargs="*",

@@ -268,6 +268,39 @@ def update_stale(state: TSState, arm: Array, cost: Array,
         tmp, mu=new_mu.astype(jnp.float32), sigma2=new_sigma.astype(jnp.float32))
 
 
+def update_censored(state: TSState, arm: Array,
+                    staleness: Array = 0.0) -> TSState:
+    """Censored UPDATE: a pull of `arm` produced *no* cost — the device
+    crashed, or the pull timed out at the dispatcher's deadline.  There
+    is no observation to enter the history (count / sum_x / sum_x2 are
+    untouched: the empirical mean must not move on evidence that never
+    arrived), but the failed pull is not information-free either — the
+    posterior the arm was selected under has aged by the attempt.  The
+    censored update therefore accumulates ``1 + staleness`` units into
+    the arm's `stale_n`, widening its effective observation variance
+    through the same inflation as `update_stale`:
+
+        sigma1_eff^2 = sigma1^2 * (1 + STALE_ETA * S / n)
+
+    so an arm whose pulls keep failing gets *less* certain, never more —
+    posteriors stay honest under chaos, and an arm with no successful
+    observations at all (n = 0) stays exactly at its prior (the
+    inflation multiplies a zero-precision term).  Never called on the
+    zero-fault path, which is what keeps fault-free runs bit-identical.
+    """
+    arm = jnp.asarray(arm)
+    onehot = jnp.arange(state.n_arms) == arm
+    stale_n = state.stale_n + onehot * (
+        1.0 + jnp.asarray(staleness, jnp.float32))
+    tmp = dataclasses.replace(state, stale_n=stale_n)
+    post_mu, post_sigma = _posterior_all(tmp)
+    new_mu = jnp.where(onehot, post_mu, state.mu)
+    new_sigma = jnp.where(onehot, post_sigma, state.sigma2)
+    return dataclasses.replace(
+        tmp, mu=new_mu.astype(jnp.float32),
+        sigma2=new_sigma.astype(jnp.float32))
+
+
 def update_batch(state: TSState, arms: Array, costs: Array) -> TSState:
     """Delayed batched UPDATE: record K (arm, cost) observations at once and
     recompute the posterior of every touched arm from its full history.

@@ -242,6 +242,18 @@ class CamelTS:
             return bandit.update_streaming(state, arm, cost)
         return bandit.update_stale(state, arm, cost, staleness)
 
+    def update_censored(self, state: bandit.TSState, arm: Array,
+                        staleness: float = 0.0) -> bandit.TSState:
+        """Failed/timed-out pull: no cost arrived, so nothing enters the
+        history — the arm's effective observation variance is widened
+        instead (`bandit.update_censored`).  The streaming variant has no
+        sufficient-statistics form to inflate; its censored update is a
+        no-op (the controller's `FailedPull` record still documents the
+        failure)."""
+        if self.streaming:
+            return state
+        return bandit.update_censored(state, arm, staleness)
+
 
 class CamelWindowedTS:
     """Sliding-window Camel for non-stationary workloads (beyond paper)."""

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.arms import ArmSpace
 from repro.core.cost import CostModel, RegretTracker, summarize_run
 from repro.obs import tracing as obslog
+from repro.platform.base import FailedPull
 from repro.platform.telemetry import Observation
 
 
@@ -103,6 +104,10 @@ class ControllerResult:
     best_arm: int
     best_knobs: Dict[str, object]
     cum_regret: np.ndarray
+    # Pulls whose every dispatch attempt failed (crash/timeout under a
+    # fault plan); they consumed budget but produced no observation.
+    failed_pulls: List[FailedPull] = dataclasses.field(
+        default_factory=list)
 
     def summary(self) -> dict:
         e = np.array([r.energy for r in self.records])
@@ -122,6 +127,8 @@ class ControllerResult:
                 [o.queue_wait for o in obs]))
             out["saturated_rounds"] = int(sum(o.backlog > 0 for o in obs))
             out["total_tokens"] = int(sum(o.tokens for o in obs))
+        if self.failed_pulls:
+            out["failed_pulls"] = len(self.failed_pulls)
         return out
 
     def arm_counts(self, n_arms: int) -> np.ndarray:
@@ -388,6 +395,7 @@ class AsyncController(BatchController):
         regret = RegretTracker(self.optimal_cost
                                if self.optimal_cost is not None else 0.0)
         records: List[RoundRecord] = []
+        failed: List[FailedPull] = []
         in_flight: Dict[int, Tuple[int, Dict, int]] = {}
         submitted = completed = 0
         events = 0            # posterior-refresh events (waves applied)
@@ -411,6 +419,29 @@ class AsyncController(BatchController):
             for slot, comp in enumerate(wave):
                 arm, knobs, epoch = in_flight.pop(comp.ticket)
                 obs = comp.obs
+                if obs is None:
+                    # Censored completion: every dispatch attempt failed
+                    # (crash/timeout).  No cost arrived, so the posterior
+                    # mean must not move — the arm's effective variance
+                    # widens instead when the policy supports censoring
+                    # (`update_censored`), and the pull still consumes
+                    # budget so the loop terminates under total chaos.
+                    staleness = events - epoch
+                    failed.append(FailedPull(
+                        ticket=comp.ticket, worker=comp.worker,
+                        knobs=knobs, reason=comp.fault or "unknown",
+                        submitted_at=comp.submitted_at,
+                        failed_at=comp.finished_at,
+                        attempts=comp.attempts))
+                    state = self._update_censored(state, arm, staleness)
+                    if tracing:
+                        obslog.emit("update.censored", arm=int(arm),
+                                    reason=comp.fault,
+                                    staleness=staleness, wave=events,
+                                    attempts=comp.attempts,
+                                    policy=type(self.policy).__name__)
+                    completed += 1
+                    continue
                 c = float(self.cost_model.cost(obs.energy, obs.latency))
                 staleness = events - epoch
                 state = self._update_stale(state, arm, c, staleness,
@@ -446,7 +477,18 @@ class AsyncController(BatchController):
                         n_pulls=len(records))
         return ControllerResult(
             records=records, final_state=state, best_arm=best_arm,
-            best_knobs=self.space.values(best_arm), cum_regret=regret.curve)
+            best_knobs=self.space.values(best_arm),
+            cum_regret=regret.curve, failed_pulls=failed)
+
+    def _update_censored(self, state, arm: int, staleness: int):
+        """Apply one censored (failed) completion: the policy's
+        `update_censored` when it has one (CamelTS: pure variance
+        inflation, no mean movement), else no update at all — either way
+        the posterior never sharpens on evidence that did not arrive."""
+        fn = getattr(self.policy, "update_censored", None)
+        if fn is None:
+            return state
+        return fn(state, jnp.asarray(arm), float(staleness))
 
     def _update_stale(self, state, arm: int, cost: float, staleness: int,
                       device=None):

@@ -1,0 +1,26 @@
+"""repro.faults — deterministic fault injection + graceful degradation.
+
+Edge serving's routine failures — sensor dropouts and NaN spikes, device
+crashes and thermal throttling, hung stragglers, clients abandoning
+requests — as a seeded, replayable schedule (`FaultPlan`,
+``--faults <spec>``) plus the injector wrappers that thread it through
+every serving seam (`FlakySensor`, `FaultyFleet`,
+`apply_request_faults`).  The degradation half lives where the seams
+are: `platform.base.AsyncDispatcher` (deadlines, retries, quarantine),
+`obs.sensors.FallbackSensor` / `obs.meter` (sensor chains, per-sample
+error counting), `core.controller` (censored `FailedPull` records), and
+`serving.scheduler` / `serving.engine` (request cancellation).
+
+See docs/RESILIENCE.md for the spec grammar, event reference, and the
+censored-update math; `benchmarks/resilience.py` (E14) is the
+end-to-end evidence.
+"""
+
+from repro.faults.injectors import (FaultyFleet, FlakySensor,
+                                    apply_request_faults, nominal_duration,
+                                    wrap_env, wrap_sensor)
+from repro.faults.plan import FaultPlan, parse_faults
+
+__all__ = ["FaultPlan", "FaultyFleet", "FlakySensor",
+           "apply_request_faults", "nominal_duration", "parse_faults",
+           "wrap_env", "wrap_sensor"]

@@ -45,12 +45,23 @@ Observability (any mode):
   --sensor SPEC    power source: `simulated` (default — the analytical
                    `Platform.power`, bit-identical to not sensing),
                    `sysfs` (Jetson INA3221 rails), `nvml`,
-                   `replay:<path>` (deterministic JSONL trace), or
-                   `record:<path>` (capture a trace).  Engine mode
-                   meters every pull with the sensor; other modes meter
-                   the whole run with non-simulated sensors and report
-                   the measurement under a `sensor` output key + a
-                   `sensor.run` trace event.
+                   `replay:<path>` (deterministic JSONL trace),
+                   `record:<path>` (capture a trace), or
+                   `fallback:a,b,...` (degrade down a chain on sensor
+                   failure).  Engine mode meters every pull with the
+                   sensor; other modes meter the whole run with
+                   non-simulated sensors and report the measurement
+                   under a `sensor` output key + a `sensor.run` trace
+                   event.
+  --faults SPEC    seeded fault injection (`repro.faults.parse_faults`
+                   grammar, e.g. ``pull_fail=0.2,crash=0@4,deadline=4``):
+                   fleet modes run behind the fault-wrapping fleet env
+                   (crashed/throttled devices, flaky pulls, dispatcher
+                   deadlines + retries), engine mode stamps request
+                   deadlines/cancellations and wraps the power sensor,
+                   and any run-level sensor becomes flaky.  The empty/
+                   ``none`` spec is a no-op (bit-identical run).  See
+                   docs/RESILIENCE.md.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --mode search \
@@ -71,6 +82,7 @@ import math
 
 from repro import obs as obs_mod
 from repro.core import baselines, controller, cost, priors
+from repro.faults import parse_faults, wrap_env, wrap_sensor
 from repro.platform import make_env, make_space
 from repro.serving import energy as energy_mod
 from repro.serving import simulator as sim_mod
@@ -145,7 +157,7 @@ def validate_mode(model: str, n_requests: int, alpha: float, seed: int,
 def engine_mode(arch: str, rounds: int, alpha: float, seed: int,
                 sensor: str = "simulated",
                 decode_impl: str = "fused",
-                scheduler: str = "static") -> dict:
+                scheduler: str = "static", faults=None) -> dict:
     """`sensor` selects the per-pull power source (`repro.obs.make_sensor`
     spec): every engine pull is metered through it.  The default
     "simulated" sensor reads the same analytical board model the
@@ -158,7 +170,7 @@ def engine_mode(arch: str, rounds: int, alpha: float, seed: int,
     name = f"engine/{arch}"
     env = make_env(name, seed=seed, prompt_len=16, max_new_tokens=8,
                    sensor=sensor, decode_impl=decode_impl,
-                   scheduler=scheduler)
+                   scheduler=scheduler, faults=faults)
     space = make_space(name)
     cm = cost.CostModel(alpha=alpha)
     e0, l0 = env.pull(space.values(space.corner()), 0)
@@ -203,7 +215,7 @@ def _fleet_policy(policy_name: str, model: str, space, alpha: float,
 
 def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
                n_devices: int, k: int = 0,
-               policy_name: str = "camel") -> dict:
+               policy_name: str = "camel", faults=None) -> dict:
     """Batched Camel search over an N-device fleet: K slots per round
     (default: one per device) dispatched across the fleet's shared
     arrival queue; one delayed posterior update per round.  `rounds` is
@@ -224,7 +236,11 @@ def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     policy = _fleet_policy(policy_name, model, space, alpha, n_devices)
     ctrl = controller.BatchController(space, policy, cm,
                                       optimal_cost=opt_cost, seed=seed, k=k)
-    res = ctrl.run(env, max(1, math.ceil(rounds / k)), pull_budget=rounds)
+    # Faults wrap the *run* env only; the analytic reference (e_ref,
+    # optimal landscape) above stays fault-free.
+    run_env = wrap_env(env, faults) if faults is not None else env
+    res = ctrl.run(run_env, max(1, math.ceil(rounds / k)),
+                   pull_budget=rounds)
     out = res.summary()
     out["optimal_knobs"] = space.values(opt_arm)
     out["found_optimal"] = bool(res.best_arm == opt_arm)
@@ -238,7 +254,7 @@ def fleet_mode(model: str, rounds: int, alpha: float, seed: int,
 
 def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
                      n_devices: int, k: int = 0, straggler: float = 1.0,
-                     policy_name: str = "camel") -> dict:
+                     policy_name: str = "camel", faults=None) -> dict:
     """Asynchronous Camel search over an N-device fleet: K arms in flight
     through the completion-ordered dispatcher (default K = fleet size),
     per-completion staleness-aware posterior updates instead of a round
@@ -260,7 +276,13 @@ def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     policy = _fleet_policy(policy_name, model, space, alpha, n_devices)
     ctrl = controller.AsyncController(space, policy, cm,
                                       optimal_cost=opt_cost, seed=seed, k=k)
-    res = ctrl.run(make_env(name, **env_kw), max(1, math.ceil(rounds / k)),
+    run_env = make_env(name, **env_kw)
+    if faults is not None:
+        # Chaos wraps the run env only (injected pull faults, device
+        # crashes/throttles, dispatcher deadlines + retries); the
+        # analytic reference above stays fault-free.
+        run_env = wrap_env(run_env, faults)
+    res = ctrl.run(run_env, max(1, math.ceil(rounds / k)),
                    pull_budget=rounds)
     out = res.summary()
     staleness = [r.obs.metadata["staleness"] for r in res.records]
@@ -273,9 +295,10 @@ def async_fleet_mode(model: str, rounds: int, alpha: float, seed: int,
     out["n_waves"] = res.n_rounds
     out["n_pulls"] = len(res.records)
     out["wall_clock_sim_s"] = float(
-        res.records[-1].obs.metadata["finished_at"])
-    out["mean_staleness"] = float(sum(staleness) / len(staleness))
-    out["max_staleness"] = int(max(staleness))
+        res.records[-1].obs.metadata["finished_at"]) if res.records else 0.0
+    out["mean_staleness"] = (float(sum(staleness) / len(staleness))
+                             if staleness else 0.0)
+    out["max_staleness"] = int(max(staleness)) if staleness else 0
     return out
 
 
@@ -322,7 +345,16 @@ def main() -> None:
                     help="write the run's JSONL event trace + metrics "
                          "snapshot here (summarize with "
                          "tools/trace_report.py)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="seeded fault injection spec, e.g. "
+                         "'pull_fail=0.2,crash=0@4,deadline=4,seed=1' "
+                         "(see docs/RESILIENCE.md); empty or 'none' "
+                         "disables injection")
     args = ap.parse_args()
+
+    plan = parse_faults(args.faults) if args.faults else None
+    if plan is not None and plan.is_zero:
+        plan = None      # explicit no-op spec: keep the bit-identical path
 
     if args.policy == "contextual" and args.mode not in ("fleet",
                                                          "async-fleet"):
@@ -341,16 +373,16 @@ def main() -> None:
             return engine_mode(args.arch, args.rounds, args.alpha,
                                args.seed, sensor=args.sensor,
                                decode_impl=args.decode_impl,
-                               scheduler=args.scheduler)
+                               scheduler=args.scheduler, faults=plan)
         if args.mode == "fleet":
             return fleet_mode(args.model, args.rounds, args.alpha,
                               args.seed, args.fleet_size, k=args.k,
-                              policy_name=args.policy)
+                              policy_name=args.policy, faults=plan)
         if args.mode == "async-fleet":
             return async_fleet_mode(args.model, args.rounds, args.alpha,
                                     args.seed, args.fleet_size, k=args.k,
                                     straggler=args.straggler,
-                                    policy_name=args.policy)
+                                    policy_name=args.policy, faults=plan)
         return tpu_mode(args.arch, args.rounds, args.alpha, args.seed)
 
     session = obs_mod.observing(args.metrics_out) if args.metrics_out \
@@ -363,6 +395,8 @@ def main() -> None:
             # the whole search instead and its joules/avg/peak land in
             # the output and the trace.
             sensor = obs_mod.make_sensor(args.sensor)
+            if plan is not None:
+                sensor = wrap_sensor(sensor, plan)
             meter = obs_mod.EnergyMeter(sensor)
             try:
                 with meter.measure() as m:
@@ -373,6 +407,8 @@ def main() -> None:
             out["sensor"] = m.summary()
         else:
             out = dispatch()
+    if plan is not None:
+        out["faults"] = args.faults
     print(json.dumps(out, indent=2, default=str))
 
 

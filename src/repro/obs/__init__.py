@@ -24,18 +24,19 @@ trace schema, and capture/replay workflow.
 
 from repro.obs.meter import EnergyMeter, Measurement
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
-from repro.obs.sensors import (NVMLSensor, PowerSensor, RecordingSensor,
-                               ReplaySensor, SensorUnavailable,
-                               SimulatedSensor, SysfsRailsSensor,
-                               autodetect_sensor, make_sensor)
+from repro.obs.sensors import (FallbackSensor, NVMLSensor, PowerSensor,
+                               RecordingSensor, ReplaySensor,
+                               SensorUnavailable, SimulatedSensor,
+                               SysfsRailsSensor, autodetect_sensor,
+                               make_sensor)
 from repro.obs.tracing import (ObsSession, active, emit, observing,
                                session, set_session)
 
 __all__ = [
     "EnergyMeter", "Measurement",
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "NVMLSensor", "PowerSensor", "RecordingSensor", "ReplaySensor",
-    "SensorUnavailable", "SimulatedSensor", "SysfsRailsSensor",
-    "autodetect_sensor", "make_sensor",
+    "FallbackSensor", "NVMLSensor", "PowerSensor", "RecordingSensor",
+    "ReplaySensor", "SensorUnavailable", "SimulatedSensor",
+    "SysfsRailsSensor", "autodetect_sensor", "make_sensor",
     "ObsSession", "active", "emit", "observing", "session", "set_session",
 ]

@@ -21,12 +21,20 @@ tests/test_obs.py.
 For genuinely varying signals (rails, NVML, replayed traces) the
 trapezoid is exact for piecewise-linear power and second-order accurate
 otherwise; the accuracy-vs-closed-form test drives it with ramps.
+
+Fault tolerance: a `read_watts()` that raises, or returns a non-finite
+value (NaN spikes from flaky rails), does not kill the sampler thread or
+poison the integral — the sample is dropped and counted in
+`Measurement.sample_errors` (surfaced by `summary()`), and sampling
+continues.  A measurement whose every sample failed finalizes to zeros
+rather than crashing.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
 import time
 from typing import List, Optional
@@ -45,6 +53,7 @@ class Measurement:
     avg_watts: float = 0.0
     peak_watts: float = 0.0
     duration_s: float = 0.0
+    sample_errors: int = 0
     _clock: object = time.monotonic
     _sensor: object = None
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
@@ -53,9 +62,21 @@ class Measurement:
     def n_samples(self) -> int:
         return len(self.times)
 
-    def sample(self) -> float:
-        """Read the sensor once and append the (t, w) point."""
-        w = float(self._sensor.read_watts())
+    def sample(self) -> Optional[float]:
+        """Read the sensor once and append the (t, w) point.  A read that
+        raises or returns a non-finite value is dropped and counted in
+        `sample_errors` (returns None) — one bad read must not kill the
+        background sampler thread or poison the integral."""
+        try:
+            w = float(self._sensor.read_watts())
+        except Exception:  # noqa: BLE001 - any sensor failure degrades
+            with self._lock:
+                self.sample_errors += 1
+            return None
+        if not math.isfinite(w):
+            with self._lock:
+                self.sample_errors += 1
+            return None
         with self._lock:
             self.times.append(float(self._clock()))
             self.watts.append(w)
@@ -63,6 +84,10 @@ class Measurement:
 
     def _finalize(self) -> None:
         t, w = self.times, self.watts
+        if not t:
+            # Every sample failed: nothing to integrate; the zeros plus
+            # a non-zero sample_errors tell the story in summary().
+            return
         self.duration_s = t[-1] - t[0]
         self.peak_watts = max(w)
         if min(w) == self.peak_watts:
@@ -80,7 +105,8 @@ class Measurement:
     def summary(self) -> dict:
         return {"sensor": self.sensor_name, "joules": self.joules,
                 "avg_watts": self.avg_watts, "peak_watts": self.peak_watts,
-                "duration_s": self.duration_s, "n_samples": self.n_samples}
+                "duration_s": self.duration_s, "n_samples": self.n_samples,
+                "sample_errors": self.sample_errors}
 
 
 class EnergyMeter:

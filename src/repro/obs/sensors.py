@@ -22,16 +22,36 @@ Sensor matrix (see docs/TELEMETRY.md):
 * `RecordingSensor`  — wraps any sensor and appends every reading to a
   JSONL trace; `ReplaySensor(path)` of that file replays the identical
   watt sequence (round-trip tested).
+* `FallbackSensor`   — an ordered chain of sensors; a mid-run
+  `read_watts` failure degrades to the next sensor (one `fault.sensor`
+  event per hop) instead of killing the measurement.
 
 Trace row schema (shared by Replay/Recording): one JSON object per line,
 ``{"t": <seconds since recording start>, "watts": <float>}``.
 
 Specs: `make_sensor("simulated" | "sysfs" | "nvml" | "replay:<path>" |
-"record:<path>")` builds a sensor from the CLI spelling (`serve.py
---sensor ...`).  Hardware sensors raise `SensorUnavailable` — not
-ImportError — when their backing is missing, so callers can fall back or
-fail with a clear message; nothing here imports heavy dependencies at
-module import time.
+"record:<path>" | "fallback:<spec>,<spec>,...")` builds a sensor from
+the CLI spelling (`serve.py --sensor ...`).  Hardware sensors raise
+`SensorUnavailable` — not ImportError — when their backing is missing,
+so callers can fall back or fail with a clear message; nothing here
+imports heavy dependencies at module import time.
+
+Degradation semantics (tested in tests/test_obs.py):
+
+* Trace exhaustion: a non-looping `ReplaySensor` that runs out of
+  samples *holds its final value* — `read_watts` keeps returning the
+  last recorded watts, sets `exhausted`, and emits one ``fault.sensor``
+  warning event (reason ``trace-exhausted``) on the first held read.  It
+  never raises mid-meter: a run that outlives its trace degrades to a
+  constant tail instead of dying inside the sampler thread.
+* Fallback chains: ``fallback:nvml,sysfs,simulated`` tries each spec in
+  order at construction (unavailable backends are skipped with a
+  ``fault.sensor`` event; all-unavailable raises `SensorUnavailable`),
+  then serves reads from the first live sensor.  A read that *raises*
+  degrades permanently to the next sensor in the chain (no flap-back);
+  when the last sensor fails, `SensorUnavailable` propagates.  NaN
+  readings are not a failure here — the `EnergyMeter` rejects
+  non-finite samples itself (`sample_errors`).
 """
 
 from __future__ import annotations
@@ -41,6 +61,8 @@ import json
 import time
 from typing import IO, List, Optional, Protocol, Sequence, Union, \
     runtime_checkable
+
+from repro.obs import tracing as obslog
 
 
 class SensorUnavailable(RuntimeError):
@@ -195,6 +217,13 @@ class ReplaySensor:
     however fast the meter samples it.  Past the end the trace wraps
     (`loop=True`, the default: a short rails capture can power an
     arbitrarily long CI run) or holds the final sample (`loop=False`).
+
+    Exhaustion contract (`loop=False`, tested): the sensor never raises
+    when the trace runs out — it keeps returning the final sample (a
+    constant tail), sets `exhausted = True`, and emits one
+    ``fault.sensor`` warning event (reason ``trace-exhausted``) on the
+    first held read so the degradation is visible in the trace rather
+    than an opaque exception inside the meter's sampler thread.
     """
 
     def __init__(self, source: Union[str, IO[str]], loop: bool = True):
@@ -221,6 +250,7 @@ class ReplaySensor:
                 f"power trace {self._label!r} contains no samples")
         self.loop = bool(loop)
         self._i = 0
+        self.exhausted = False
 
     @property
     def name(self) -> str:
@@ -231,6 +261,13 @@ class ReplaySensor:
             if self.loop:
                 self._i = 0
             else:
+                if not self.exhausted:
+                    self.exhausted = True
+                    if obslog.active():
+                        obslog.emit("fault.sensor", sensor=self.name,
+                                    reason="trace-exhausted",
+                                    held_watts=self.samples[-1],
+                                    n_samples=len(self.samples))
                 return self.samples[-1]
         w = self.samples[self._i]
         self._i += 1
@@ -278,6 +315,94 @@ class RecordingSensor:
         self.inner.close()
 
 
+class FallbackSensor:
+    """An ordered chain of sensors with mid-run degradation.
+
+    Reads are served by the first live sensor in the chain; a read that
+    raises (hardware unplugged, NVML gone, rails unreadable) emits a
+    ``fault.sensor`` event and degrades *permanently* to the next sensor
+    — metering continues on the fallback instead of dying.  When the
+    last sensor fails, `SensorUnavailable` propagates (the meter then
+    counts the failed samples, see `EnergyMeter`).
+
+    Build from specs via ``make_sensor("fallback:nvml,sysfs,simulated")``
+    — specs whose backing is absent at construction are skipped (with a
+    ``fault.sensor`` event); all-absent raises `SensorUnavailable`.
+    `set_utilization` fans out to every chain member that accepts it, so
+    degrading to a `SimulatedSensor` picks up the current workload.
+    """
+
+    def __init__(self, sensors: Sequence):
+        self._chain = list(sensors)
+        if not self._chain:
+            raise SensorUnavailable("FallbackSensor needs >= 1 sensor")
+        self._i = 0
+        self.degradations = 0
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[str], platform=None
+                   ) -> "FallbackSensor":
+        chain, dead = [], []
+        for spec in specs:
+            spec = spec.strip()
+            if not spec:
+                continue
+            try:
+                chain.append(make_sensor(spec, platform))
+            except SensorUnavailable as e:
+                dead.append(f"{spec}: {e}")
+                if obslog.active():
+                    obslog.emit("fault.sensor", sensor=spec,
+                                phase="construct", reason=str(e))
+        if not chain:
+            raise SensorUnavailable(
+                "no sensor in the fallback chain is available: "
+                + "; ".join(dead))
+        return cls(chain)
+
+    @property
+    def current(self):
+        return self._chain[self._i]
+
+    @property
+    def name(self) -> str:
+        return f"fallback:{self.current.name}"
+
+    def set_utilization(self, utilization: float) -> None:
+        for s in self._chain:
+            fn = getattr(s, "set_utilization", None)
+            if fn is not None:
+                fn(utilization)
+
+    def read_watts(self) -> float:
+        while True:
+            s = self._chain[self._i]
+            try:
+                return float(s.read_watts())
+            except Exception as e:  # noqa: BLE001 - any backend failure
+                if self._i + 1 >= len(self._chain):
+                    raise SensorUnavailable(
+                        f"fallback chain exhausted; last sensor "
+                        f"{s.name!r} failed: {e}") from e
+                self.degradations += 1
+                self._i += 1
+                if obslog.active():
+                    obslog.emit("fault.sensor", sensor=s.name,
+                                reason=f"read failed: {e}",
+                                degraded_to=self._chain[self._i].name)
+                try:
+                    s.close()
+                except Exception:  # noqa: BLE001 - already degraded
+                    pass
+
+    def close(self) -> None:
+        for s in self._chain[self._i:]:
+            try:
+                s.close()
+            except Exception:  # noqa: BLE001 - close best-effort
+                pass
+
+
 def autodetect_sensor(platform=None):
     """Best available real sensor, falling back to the analytical model:
     sysfs rails, then NVML, then `SimulatedSensor(platform)` (which
@@ -293,17 +418,21 @@ def autodetect_sensor(platform=None):
 def make_sensor(spec, platform=None):
     """Build a sensor from its CLI spelling (`serve.py --sensor ...`):
 
-        simulated        analytical Platform.power (needs `platform`)
-        sysfs            Jetson INA3221 rails
-        nvml             NVIDIA NVML board power
-        replay:<path>    deterministic JSONL trace playback
-        record:<path>    autodetected sensor, recorded to <path>
+        simulated            analytical Platform.power (needs `platform`)
+        sysfs                Jetson INA3221 rails
+        nvml                 NVIDIA NVML board power
+        replay:<path>        deterministic JSONL trace playback
+        record:<path>        autodetected sensor, recorded to <path>
+        fallback:<s>,<s>,..  ordered degradation chain of the above
 
     A `PowerSensor` instance passes through unchanged, so APIs can accept
     either a spec string or a ready sensor.
     """
     if not isinstance(spec, str):
         return spec
+    if spec.startswith("fallback:"):
+        return FallbackSensor.from_specs(
+            spec[len("fallback:"):].split(","), platform)
     if spec == "simulated":
         return SimulatedSensor(platform)
     if spec == "sysfs":

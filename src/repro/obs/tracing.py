@@ -99,6 +99,17 @@ class ObsSession:
         "sensor.run": [("gauge", "sensor_joules", "joules"),
                        ("gauge", "sensor_avg_w", "avg_watts"),
                        ("gauge", "sensor_peak_w", "peak_watts")],
+        # Fault injection/degradation seams (repro.faults + the resilient
+        # dispatcher/sensors/engine): injections vs responses count
+        # separately so a chaos run's trace answers both "what was
+        # injected" and "what did the stack do about it".
+        "fault.inject": [("counter", "faults_injected_total", None)],
+        "fault.sensor": [("counter", "sensor_faults_total", None)],
+        "fault.pull": [("counter", "pull_faults_total", None)],
+        "fault.retry": [("counter", "retries_total", None),
+                        ("histogram", "retry_backoff_s", "backoff_s")],
+        "fault.device": [("counter", "device_faults_total", None)],
+        "fault.request": [("counter", "request_faults_total", None)],
     }
 
     def now(self) -> float:

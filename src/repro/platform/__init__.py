@@ -19,9 +19,9 @@ and docs/ARCHITECTURE.md for the sync vs async dispatch timelines.
 """
 
 from repro.platform.base import (AsyncDispatcher, BaseEnvironment,
-                                 Completion, DVFSPlatform, Platform,
-                                 TPUPlatform, as_platform,
-                                 measurement_horizon)
+                                 Completion, DVFSPlatform, FailedPull,
+                                 Platform, PullFault, TPUPlatform,
+                                 as_platform, measurement_horizon)
 from repro.platform.fleet import (FleetEnv, barrier_walltimes, make_fleet,
                                   merge_observations)
 from repro.platform.registry import (available_envs, make_env, make_space,
@@ -33,7 +33,8 @@ from repro.platform.telemetry import (Observation, QueueingLatency, observe,
 
 __all__ = [
     "AsyncDispatcher", "BaseEnvironment", "Completion", "DVFSPlatform",
-    "FleetEnv", "Platform", "TPUPlatform", "as_platform", "available_envs",
+    "FailedPull", "FleetEnv", "Platform", "PullFault", "TPUPlatform",
+    "as_platform", "available_envs",
     "barrier_walltimes", "make_env", "make_fleet", "make_space",
     "measurement_horizon", "merge_observations", "open_dispatcher",
     "parse_name", "pull_async", "pull_many", "register_env",

@@ -44,6 +44,14 @@ a device that is slow to return results (contention, thermal throttling,
 restarts) without its serving telemetry changing — the observation is the
 same, it just arrives late, and late observations carry staleness the
 bandit discounts for (`bandit.update_stale`).
+
+Fault injection wraps at this seam: `repro.faults.FaultyFleet` decorates
+a fleet so crashed devices raise `PullFault` on `pull_on` (the resilient
+dispatcher re-dispatches, quarantines, and ultimately censors), the
+synchronous paths re-dispatch crashed slots round-robin, and throttles
+inflate `pull_duration`.  An infinite `dispatch_factors` entry models a
+*hung* device — only survivable with dispatcher deadlines armed
+(``--faults "deadline=..."``; see docs/RESILIENCE.md).
 """
 
 from __future__ import annotations

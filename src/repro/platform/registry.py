@@ -319,7 +319,8 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                  sensor=None, sample_hz: float = 20.0,
                  decode_impl: str = "fused", prompt_bucket: int = 16,
                  scheduler: str = "static",
-                 requests_per_pull=None, eos_id=None, chunk: int = 16):
+                 requests_per_pull=None, eos_id=None, chunk: int = 16,
+                 faults=None):
     import jax
     import repro.configs as configs_mod
     from repro.models.registry import bundle_for
@@ -345,4 +346,4 @@ def _engine_live(arch: str, *, seed: int = 0, max_batch: int = 28,
                              sensor=sensor, sample_hz=sample_hz,
                              scheduler=scheduler,
                              requests_per_pull=requests_per_pull,
-                             eos_id=eos_id, chunk=chunk)
+                             eos_id=eos_id, chunk=chunk, faults=faults)

@@ -107,6 +107,7 @@ class ContinuousStats(EngineStats):
     decode_steps: int = 0
     prefill_calls: int = 0
     n_requests: int = 0
+    n_cancelled: int = 0
     mean_occupancy: float = 0.0
     mean_queue_wait_s: float = 0.0
     records: List[RequestRecord] = dataclasses.field(default_factory=list)
@@ -455,6 +456,38 @@ class InferenceEngine:
         remaining = np.zeros((b,), np.int32)
 
         while len(queue) or sched.any_live():
+            # Deadline processing (request cancellation, repro.faults):
+            # expired pending requests are abandoned before admission;
+            # live slots past their deadline retire mid-generate with
+            # the tokens emitted so far and free for refill.  Deadlines
+            # are only checked between chunks, so cancellation latency
+            # is bounded by one scheduler iteration (admission prefills
+            # plus a chunk of decode).
+            for req in queue.expired(sim):
+                queue.pop(req)
+                rec = sched.abandon(req, sim)
+                outputs[req.rid] = np.zeros((0,), np.int32)
+                if obslog.active():
+                    obslog.emit("fault.request", rid=req.rid,
+                                action="abandon",
+                                deadline_s=req.deadline_s,
+                                queue_wait_s=rec.queue_wait_s)
+            for slot in sched.due_cancellations(sim):
+                rec = sched.cancel(slot, sim)
+                outputs[rec.rid] = np.asarray(rec.tokens, np.int32)
+                finished[slot] = True
+                remaining[slot] = 0
+                if obslog.active():
+                    obslog.emit("fault.request", rid=rec.rid,
+                                action="cancel", slot=slot,
+                                tokens=rec.n_tokens)
+                    obslog.emit("engine.request", dur_s=rec.latency_s,
+                                rid=rec.rid, slot=rec.slot,
+                                tokens=rec.n_tokens,
+                                prompt_len=rec.prompt_len,
+                                queue_wait_s=rec.queue_wait_s,
+                                admit_s=rec.admit_s,
+                                finish_s=rec.finish_s, cancelled=True)
             if not sched.any_live():
                 arrived = queue.arrived(sim)
                 if not arrived:
@@ -581,6 +614,7 @@ class InferenceEngine:
             tokens_out=int(sum(r.n_tokens for r in recs)),
             decode_impl="fused", sim_s=sim, decode_steps=decode_steps,
             prefill_calls=prefill_calls, n_requests=len(recs),
+            n_cancelled=sum(1 for r in recs if r.cancelled),
             mean_occupancy=sched.mean_occupancy,
             mean_queue_wait_s=(float(np.mean([r.queue_wait_s
                                               for r in recs]))
@@ -625,7 +659,8 @@ class EngineEnvironment(BaseEnvironment):
                  sensor=None, sample_hz: float = 20.0,
                  scheduler: str = "static",
                  requests_per_pull: Optional[int] = None,
-                 eos_id: Optional[int] = None, chunk: int = 16):
+                 eos_id: Optional[int] = None, chunk: int = 16,
+                 faults=None):
         if scheduler not in ("static", "continuous"):
             raise ValueError(f"scheduler must be 'static' or 'continuous', "
                              f"got {scheduler!r}")
@@ -642,8 +677,15 @@ class EngineEnvironment(BaseEnvironment):
         self.chunk = chunk
         self.seed_base = seed
         self.rng = np.random.default_rng(seed)
+        # A zero FaultPlan is dropped outright so the default path stays
+        # bit-identical (asserted in benchmarks/resilience.py).
+        self.faults = faults if faults is not None \
+            and not faults.is_zero else None
         self.sensor = make_sensor(sensor, platform=self.platform) \
             if sensor is not None else None
+        if self.faults is not None and self.sensor is not None:
+            from repro.faults import wrap_sensor
+            self.sensor = wrap_sensor(self.sensor, self.faults)
         self.meter = EnergyMeter(self.sensor, hz=sample_hz) \
             if self.sensor is not None else None
 
@@ -672,6 +714,9 @@ class EngineEnvironment(BaseEnvironment):
             reqs.append(EngineRequest(rid=r.rid, prompt=toks,
                                       max_new_tokens=mnt,
                                       arrival_s=r.arrival_s))
+        if self.faults is not None:
+            from repro.faults import apply_request_faults
+            reqs = apply_request_faults(reqs, self.faults)
         return reqs
 
     def _pull_continuous(self, batch: int, level: int,
@@ -703,6 +748,7 @@ class EngineEnvironment(BaseEnvironment):
                     "tokens_per_s": st.tokens_per_s,
                     "goodput_rps": st.goodput_rps,
                     "n_requests": st.n_requests,
+                    "n_cancelled": st.n_cancelled,
                     "decode_steps": st.decode_steps,
                     "mean_occupancy": st.mean_occupancy,
                     "mean_queue_wait_s": st.mean_queue_wait_s}

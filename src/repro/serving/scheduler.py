@@ -45,12 +45,16 @@ class EngineRequest:
     """One generation request for the continuous engine.
 
     `prompt` is the token array (np.int32); `arrival_s` is the request's
-    arrival on the simulation clock (0.0 = already queued)."""
+    arrival on the simulation clock (0.0 = already queued).  `deadline_s`
+    is an optional absolute sim-clock deadline: a pending request past it
+    is abandoned, a live one is cancelled mid-generate and its slot
+    refilled (`repro.faults.apply_request_faults` stamps these)."""
 
     rid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -65,6 +69,7 @@ class RequestRecord:
     finish_s: float = 0.0
     n_tokens: int = 0
     joules: float = 0.0
+    cancelled: bool = False
     tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -104,6 +109,12 @@ class RequestQueue:
     def pop(self, req: EngineRequest) -> None:
         self._pending.remove(req)
 
+    def expired(self, now: float) -> List[EngineRequest]:
+        """Pending requests whose deadline has passed — never admitted,
+        they should be popped and abandoned (`SlotScheduler.abandon`)."""
+        return [r for r in self._pending
+                if r.deadline_s is not None and r.deadline_s <= now]
+
 
 class SlotScheduler:
     """Bookkeeping for the engine's persistent slot pool.
@@ -121,6 +132,7 @@ class SlotScheduler:
         self.prompt_bucket = prompt_bucket
         self.pos = 0                       # global KV clock
         self._occupant: List[Optional[int]] = [None] * n_slots  # rid per slot
+        self._deadline: List[Optional[float]] = [None] * n_slots
         self._open: Dict[int, RequestRecord] = {}    # rid -> live record
         self.records: List[RequestRecord] = []       # finalized, retire order
         self._finished_rids: set = set()
@@ -237,6 +249,7 @@ class SlotScheduler:
         if req.rid in self._open or req.rid in self._finished_rids:
             raise RuntimeError(f"request {req.rid} admitted twice")
         self._occupant[slot] = req.rid
+        self._deadline[slot] = req.deadline_s
         self._open[req.rid] = RequestRecord(
             rid=req.rid, arrival_s=req.arrival_s, admit_s=now,
             prompt_len=len(req.prompt), slot=slot)
@@ -249,15 +262,45 @@ class SlotScheduler:
         rec.tokens.extend(int(t) for t in tokens)
         rec.n_tokens += len(tokens)
 
-    def retire(self, slot: int, now: float) -> RequestRecord:
+    def retire(self, slot: int, now: float,
+               cancelled: bool = False) -> RequestRecord:
         """Finalize the request in `slot` (exactly once) and free it."""
         rid = self._occupant[slot]
         if rid is None:
             raise RuntimeError(f"retire on vacant slot {slot}")
         rec = self._open.pop(rid)
         rec.finish_s = now
+        rec.cancelled = cancelled
         self._occupant[slot] = None
+        self._deadline[slot] = None
         self._finished_rids.add(rid)
+        self.records.append(rec)
+        return rec
+
+    # -- deadlines / cancellation -----------------------------------------
+
+    def due_cancellations(self, now: float) -> List[int]:
+        """Live slots whose request's deadline has passed."""
+        return [i for i, d in enumerate(self._deadline)
+                if self._occupant[i] is not None
+                and d is not None and d <= now]
+
+    def cancel(self, slot: int, now: float) -> RequestRecord:
+        """Cancel the live request in `slot`: same exactly-once retire
+        machinery, but the record is flagged `cancelled` (tokens emitted
+        so far stay attributed to it).  The slot frees for refill."""
+        return self.retire(slot, now, cancelled=True)
+
+    def abandon(self, req: EngineRequest, now: float) -> RequestRecord:
+        """Finalize a never-admitted request whose deadline expired while
+        it was still queued: a zero-token cancelled record (slot = -1)
+        so conservation over records still covers every request."""
+        if req.rid in self._open or req.rid in self._finished_rids:
+            raise RuntimeError(f"abandon on known request {req.rid}")
+        rec = RequestRecord(rid=req.rid, arrival_s=req.arrival_s,
+                            admit_s=now, prompt_len=len(req.prompt),
+                            slot=-1, finish_s=now, cancelled=True)
+        self._finished_rids.add(req.rid)
         self.records.append(rec)
         return rec
 

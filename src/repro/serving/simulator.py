@@ -23,6 +23,12 @@ Three levels of fidelity:
   batches sequentially; the controller may re-tune (frequency, batch)
   between batches.  This is the paper's *validation* setting (Results 2),
   and also what a real engine integration replaces.
+
+These simulators are *plain* (non-fleet) environments: under
+``--faults`` they run unwrapped (`repro.faults.wrap_env` passes them
+through) — device crash/throttle faults only apply to fleets, while
+sensor and request faults inject at the meter and engine seams
+(see docs/RESILIENCE.md).
 """
 
 from __future__ import annotations

@@ -68,6 +68,16 @@ def simulate(reqs, eos_at, n_slots, chunk, bucket):
     total = 0
 
     while len(queue) or sched.any_live():
+        # Deadline processing — mirrors generate_continuous: expired
+        # pending requests are abandoned, live slots past deadline are
+        # cancelled and freed for refill.  No-ops when no request
+        # carries a deadline.
+        for req in queue.expired(sim):
+            queue.pop(req)
+            sched.abandon(req, sim)
+        for slot in sched.due_cancellations(sim):
+            sched.cancel(slot, sim)
+            finished[slot] = True
         if not sched.any_live():
             arrived = queue.arrived(sim)
             if not arrived:
@@ -176,6 +186,66 @@ def test_scheduler_properties(workload):
     assert all(r.joules >= 0 for r in recs)
 
 
+@st.composite
+def deadline_workloads(draw):
+    """Workloads where some requests carry absolute deadlines, so the
+    harness exercises abandon (expired while queued) and cancel (expired
+    while live) alongside normal retirement."""
+    reqs, eos_at, n_slots, chunk, bucket = draw(workloads())
+    with_deadlines = []
+    for r in reqs:
+        patience = draw(st.one_of(st.none(),
+                                  st.floats(0.5, 60.0, allow_nan=False)))
+        if patience is not None:
+            r = EngineRequest(rid=r.rid, prompt=r.prompt,
+                              max_new_tokens=r.max_new_tokens,
+                              arrival_s=r.arrival_s,
+                              deadline_s=r.arrival_s + float(patience))
+        with_deadlines.append(r)
+    return with_deadlines, eos_at, n_slots, chunk, bucket
+
+
+@given(deadline_workloads())
+@settings(max_examples=60, deadline=None)
+def test_scheduler_deadline_properties(workload):
+    reqs, eos_at, n_slots, chunk, bucket = workload
+    sched, total = simulate(reqs, eos_at, n_slots, chunk, bucket)
+    recs = sched.records
+
+    # every request — served, cancelled mid-run, or abandoned while
+    # queued — finalizes exactly once
+    assert sorted(r.rid for r in recs) == sorted(r.rid for r in reqs)
+
+    by_rid = {r.rid: r for r in reqs}
+    for rec in recs:
+        req = by_rid[rec.rid]
+        if rec.cancelled:
+            if rec.slot == -1:       # abandoned: never admitted
+                assert rec.n_tokens == 0 and rec.tokens == []
+            else:                    # cancelled live: an oracle PREFIX
+                full = expected_stream(rec.rid, req.max_new_tokens,
+                                       eos_at[rec.rid])
+                assert rec.tokens == full[:rec.n_tokens]
+            assert req.deadline_s is not None
+            # cancellation latency is bounded by one scheduler iteration:
+            # deadlines are checked at the loop top, and one iteration is
+            # at most n_slots-1 admission prefills (one sim unit each)
+            # plus a chunk of decode before the next check
+            assert rec.finish_s <= req.deadline_s + chunk + n_slots
+        else:
+            assert rec.tokens == expected_stream(
+                rec.rid, req.max_new_tokens, eos_at[rec.rid])
+        assert rec.n_tokens == len(rec.tokens)
+        assert rec.arrival_s <= rec.finish_s
+
+    # conservation holds with cancelled partial streams included
+    assert sum(r.n_tokens for r in recs) == total
+    attribute_energy(recs, 17.3)
+    if total:
+        assert math.isclose(sum(r.joules for r in recs), 17.3,
+                            rel_tol=1e-9)
+
+
 # -- deterministic edge cases (run without hypothesis) ----------------------
 
 
@@ -256,6 +326,48 @@ def test_validate_request_errors():
         sched.validate_request(_req(1, budget=0))
     with pytest.raises(ValueError, match="max_seq_len"):
         sched.validate_request(_req(2, plen=40, budget=30))
+
+
+def test_cancel_frees_slot_exactly_once():
+    """A cancelled request retires through the same exactly-once
+    machinery as a normal finish: its slot frees for refill and neither
+    retire nor cancel can touch it again."""
+    sched = SlotScheduler(1, MAX_SEQ, 16)
+    r0 = EngineRequest(rid=0, prompt=np.ones(5, np.int32),
+                       max_new_tokens=8, deadline_s=3.0)
+    sched.seed([r0], 16, now=0.0)
+    sched.note_emitted(0, [11, 12])
+    assert sched.due_cancellations(2.9) == []
+    assert sched.due_cancellations(3.0) == [0]
+    rec = sched.cancel(0, 3.0)
+    assert rec.cancelled and rec.tokens == [11, 12] and rec.n_tokens == 2
+    assert sched.free_slots() == [0] and not sched.any_live()
+    with pytest.raises(RuntimeError, match="vacant"):
+        sched.cancel(0, 4.0)
+    with pytest.raises(RuntimeError, match="vacant"):
+        sched.retire(0, 4.0)
+    # the freed slot refills (new rid), and the cancelled rid never
+    # serves again
+    sched.seed([_req(1)], 16, now=5.0)
+    assert sched.rid_at(0) == 1
+    sched.retire(0, 6.0)
+    with pytest.raises(RuntimeError, match="admitted twice"):
+        sched.seed([r0], 16, now=7.0)
+
+
+def test_abandon_never_admitted():
+    sched = SlotScheduler(1, MAX_SEQ, 16)
+    late = EngineRequest(rid=5, prompt=np.ones(4, np.int32),
+                         max_new_tokens=4, arrival_s=1.0, deadline_s=2.0)
+    q = RequestQueue([late])
+    assert q.expired(1.5) == []
+    assert q.expired(2.0) == [late]
+    rec = sched.abandon(late, 2.0)
+    assert rec.cancelled and rec.slot == -1 and rec.n_tokens == 0
+    with pytest.raises(RuntimeError, match="known request"):
+        sched.abandon(late, 3.0)            # exactly-once
+    with pytest.raises(RuntimeError, match="admitted twice"):
+        sched.seed([late], 16, now=3.0)     # nor admitted afterwards
 
 
 def test_attribute_energy_edges():

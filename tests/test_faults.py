@@ -1,0 +1,491 @@
+"""Fault injection + graceful degradation (`repro.faults`).
+
+Covers the three layers separately so failures localize:
+
+* `FaultPlan` — the seeded schedule: spec-grammar round-trip, per-decision
+  determinism and order-independence, scheduled crash/throttle windows,
+  and the backoff law (hypothesis: deterministic under a fixed seed,
+  strictly monotone in attempt, jitter-bounded).
+* Injectors — `FlakySensor` replayable fault sequences, `FaultyFleet`
+  synchronous re-dispatch away from crashed devices, zero-plan wraps as
+  strict no-ops, and `apply_request_faults` keying deadlines by rid.
+* Degradation — the resilient `AsyncDispatcher`: per-attempt deadlines
+  that unstick a hung device (quarantine + re-dispatch, the ISSUE's
+  direct `pop_wave`-no-longer-stalls regression), retries clearing
+  transient faults within `max_attempts`, exhausted pulls delivering
+  censored completions instead of vanishing, `bandit.update_censored`
+  never sharpening the posterior, and an armed-but-idle plan leaving an
+  `AsyncController` run bit-identical to the bare fleet (the E14
+  zero-fault claim at unit-test size).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import obs as obs_mod
+from repro.core import bandit, baselines, controller, cost, priors
+from repro.faults import (FaultPlan, FaultyFleet, FlakySensor,
+                          apply_request_faults, nominal_duration,
+                          parse_faults, wrap_env, wrap_sensor)
+from repro.obs.sensors import SensorUnavailable
+from repro.platform import (AsyncDispatcher, PullFault, make_env,
+                            make_space)
+from repro.serving.scheduler import EngineRequest
+
+FLEET = "fleet/4xjetson/llama3.2-1b/landscape"
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: spec grammar + decision determinism
+# ---------------------------------------------------------------------------
+
+
+def test_parse_faults_full_grammar():
+    plan = parse_faults(
+        "pull_fail=0.2, crash=1@3, crash=0@5, throttle=0@5x2.5,"
+        "sensor_drop=0.1, sensor_nan=0.05, cancel=0.1@4.0,"
+        "deadline=3, retries=4, backoff=0.1, seed=42")
+    assert plan.pull_fail == 0.2
+    assert plan.crashes == ((1, 3), (0, 5))
+    assert plan.throttles == ((0, 5, 2.5),)
+    assert plan.sensor_drop == 0.1 and plan.sensor_nan == 0.05
+    assert plan.cancel == 0.1 and plan.cancel_patience_s == 4.0
+    assert plan.deadline_factor == 3.0
+    assert plan.max_attempts == 4 and plan.backoff_factor == 0.1
+    assert plan.seed == 42
+    assert not plan.is_zero
+
+
+def test_parse_faults_zero_and_errors():
+    for spec in (None, "", "   ", "none"):
+        assert parse_faults(spec).is_zero
+    # resilience-only knobs do NOT make a plan zero: a deadline changes
+    # dispatch policy even when no fault ever fires
+    assert not parse_faults("deadline=4").is_zero
+    assert parse_faults("retries=5").is_zero
+    with pytest.raises(ValueError, match="unknown --faults key"):
+        parse_faults("explode=1")
+    with pytest.raises(ValueError, match="want key=value"):
+        parse_faults("pull_fail")
+    with pytest.raises(ValueError, match="bad --faults token"):
+        parse_faults("crash=zero@3")
+    with pytest.raises(ValueError, match="outside"):
+        parse_faults("pull_fail=1.5")
+
+
+def test_plan_decisions_deterministic_and_order_independent():
+    plan = FaultPlan(seed=7, pull_fail=0.4, sensor_drop=0.2,
+                     sensor_nan=0.1, cancel=0.3, cancel_patience_s=2.0)
+    # sensor decisions: pure functions of the read index
+    fwd = [plan.sensor_fault(i) for i in range(200)]
+    bwd = [plan.sensor_fault(i) for i in reversed(range(200))]
+    assert fwd == bwd[::-1]
+    assert "drop" in fwd and "nan" in fwd and None in fwd
+    # pull decisions repeat exactly and move with the seed
+    d1 = [plan.pull_fault(t, t % 4, 1, t) for t in range(200)]
+    assert d1 == [plan.pull_fault(t, t % 4, 1, t) for t in range(200)]
+    other = dataclasses.replace(plan, seed=8)
+    assert d1 != [other.pull_fault(t, t % 4, 1, t) for t in range(200)]
+    # retrying the same ticket redraws: attempt is part of the identity
+    flaky = [t for t in range(200) if plan.pull_fault(t, 0, 1, t)]
+    assert any(plan.pull_fault(t, 0, 2, t) is None for t in flaky)
+    # request deadlines are keyed by rid only (admission-order free) and
+    # offset from the request's own arrival
+    hit = [r for r in range(100)
+           if plan.request_deadline(r, 0.0) is not None]
+    assert hit and len(hit) < 100
+    rid = hit[0]
+    assert plan.request_deadline(rid, 10.0) == \
+        pytest.approx(10.0 + plan.cancel_patience_s)
+
+
+def test_plan_scheduled_events():
+    plan = FaultPlan(crashes=((1, 3),),
+                     throttles=((0, 2, 2.0), (0, 5, 1.5)))
+    assert not plan.device_crashed(1, 2)
+    assert plan.device_crashed(1, 3) and plan.device_crashed(1, 99)
+    assert not plan.device_crashed(0, 99)
+    assert plan.throttle_factor(0, 1) == 1.0
+    assert plan.throttle_factor(0, 2) == 2.0
+    assert plan.throttle_factor(0, 5) == 3.0     # windows compound
+    assert plan.throttle_factor(1, 99) == 1.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ticket=st.integers(0, 10_000),
+       factor=st.floats(0.01, 1.0, allow_nan=False))
+def test_backoff_deterministic_monotone_bounded(seed, ticket, factor):
+    """The retry backoff law: deterministic per (seed, ticket, attempt),
+    strictly monotone in attempt, and jitter-bounded within
+    ``[base, 1.5 * base)`` of the exponential envelope."""
+    plan = FaultPlan(seed=seed, backoff_factor=factor)
+    again = FaultPlan(seed=seed, backoff_factor=factor)
+    prev = 0.0
+    for attempt in range(1, 8):
+        b = plan.backoff(ticket, attempt)
+        assert b == again.backoff(ticket, attempt)
+        base = factor * 2.0 ** (attempt - 1)
+        assert base <= b < 1.5 * base
+        assert b > prev
+        prev = b
+
+
+# ---------------------------------------------------------------------------
+# Injectors
+# ---------------------------------------------------------------------------
+
+
+class _ConstSensor:
+    name = "const"
+
+    def __init__(self, watts=5.0):
+        self.watts = watts
+        self.closed = False
+
+    def read_watts(self):
+        return self.watts
+
+    def close(self):
+        self.closed = True
+
+
+def test_flaky_sensor_replayable_fault_sequence():
+    plan = FaultPlan(seed=3, sensor_drop=0.3, sensor_nan=0.2)
+
+    def read_all(n=200):
+        s = FlakySensor(_ConstSensor(), plan)
+        out = []
+        for _ in range(n):
+            try:
+                out.append(s.read_watts())
+            except SensorUnavailable:
+                out.append("drop")
+        return s, out
+
+    s1, r1 = read_all()
+    s2, r2 = read_all()
+    assert r1 == r2 or all(                     # NaN != NaN: compare tags
+        (a == b) or (isinstance(a, float) and isinstance(b, float)
+                     and math.isnan(a) and math.isnan(b))
+        for a, b in zip(r1, r2))
+    drops = r1.count("drop")
+    nans = sum(1 for v in r1 if isinstance(v, float) and math.isnan(v))
+    clean = sum(1 for v in r1 if v == 5.0)
+    assert drops and nans and clean
+    assert drops + nans + clean == 200
+    assert s1.faults_injected == drops + nans == s2.faults_injected
+    assert s1.name == "flaky:const"
+    s1.close()
+    assert s1._inner.closed                     # close forwards
+
+
+def test_zero_plan_wraps_are_strict_noops():
+    zero = FaultPlan()
+    sensor = _ConstSensor()
+    assert wrap_sensor(sensor, zero) is sensor
+    assert wrap_sensor(None, zero) is None
+    env = make_env(FLEET, noise=0.0, seed=0)
+    assert wrap_env(env, zero) is env
+    # plain (non-fleet) envs pass through even under a non-zero plan:
+    # their fault surface is the sensor and request seams
+    plain = make_env("jetson/llama3.2-1b/landscape", noise=0.0, seed=0)
+    assert wrap_env(plain, FaultPlan(pull_fail=0.5)) is plain
+    # request faults with a zero plan return the input objects unchanged
+    reqs = [EngineRequest(rid=i, prompt=np.ones(4, np.int32),
+                          max_new_tokens=4) for i in range(3)]
+    out = apply_request_faults(reqs, zero)
+    assert all(a is b for a, b in zip(out, reqs))
+
+
+def test_apply_request_faults_keys_deadlines_by_rid():
+    plan = FaultPlan(seed=5, cancel=0.5, cancel_patience_s=3.0)
+    reqs = [EngineRequest(rid=i, prompt=np.ones(4, np.int32),
+                          max_new_tokens=4, arrival_s=float(i))
+            for i in range(40)]
+    stamped = {r.rid: r.deadline_s for r in apply_request_faults(reqs, plan)}
+    hit = {rid for rid, d in stamped.items() if d is not None}
+    assert hit and len(hit) < 40
+    for rid in hit:
+        assert stamped[rid] == pytest.approx(float(rid) + 3.0)
+    # admission order does not change who gets cancelled
+    rev = {r.rid: r.deadline_s
+           for r in apply_request_faults(list(reversed(reqs)), plan)}
+    assert rev == stamped
+    # cancel=1.0 stamps everyone
+    all_plan = FaultPlan(cancel=1.0, cancel_patience_s=2.0)
+    assert all(r.deadline_s == pytest.approx(r.arrival_s + 2.0)
+               for r in apply_request_faults(reqs, all_plan))
+
+
+def test_faulty_fleet_sync_paths_redispatch_crashed_device():
+    plan = FaultPlan(crashes=((0, 0),))
+    env = wrap_env(make_env(FLEET, noise=0.0, seed=0), plan)
+    assert isinstance(env, FaultyFleet)
+    space = make_space(FLEET)
+    obs = env.pull_many([space.values(i) for i in range(4)], round_index=0)
+    assert len(obs) == 4
+    assert all(o.metadata["device"] != 0 for o in obs)
+    # the single-pull path: round 0 maps to device 0, re-dispatches too
+    assert env.pull(space.values(2), 0).metadata["device"] != 0
+    # async callers see the crash as a PullFault (the dispatcher retries)
+    with pytest.raises(PullFault, match="crash"):
+        env.pull_on(0, space.values(2), 0)
+    # the whole fleet down fails loudly instead of degrading silently
+    dead = wrap_env(make_env(FLEET, noise=0.0, seed=0),
+                    FaultPlan(crashes=tuple((d, 0) for d in range(4))))
+    with pytest.raises(PullFault):
+        dead.pull_many([space.values(0)], round_index=0)
+
+
+def test_faulty_fleet_throttle_inflates_pull_duration():
+    bare = make_env(FLEET, noise=0.0, seed=0)
+    base = float(bare.pull_duration(1))
+    env = wrap_env(make_env(FLEET, noise=0.0, seed=0),
+                   FaultPlan(throttles=((1, 2, 3.0),)))
+    assert env.pull_duration(1, 0) == pytest.approx(base)
+    assert env.pull_duration(1, 2) == pytest.approx(3.0 * base)
+    assert env.pull_duration(0, 99) == pytest.approx(
+        float(bare.pull_duration(0)))
+    # nominal duration ignores hung (infinite-factor) devices
+    hung = make_env(FLEET, noise=0.0, seed=0,
+                    dispatch_factors=(float("inf"), 1, 1, 1))
+    assert math.isfinite(nominal_duration(hung))
+
+
+# ---------------------------------------------------------------------------
+# Resilient AsyncDispatcher: deadlines, retries, quarantine, exhaustion
+# ---------------------------------------------------------------------------
+
+
+def _drain(disp):
+    comps = []
+    while disp.in_flight:
+        comps.extend(disp.pop_wave())
+    return comps
+
+
+def test_hung_device_times_out_and_run_completes():
+    """The ISSUE's direct regression: a hung device (infinite dispatch
+    factor) used to wedge `pop_wave` forever.  With a per-attempt
+    deadline the first pull times out, the worker is quarantined, the
+    pull re-dispatches to a healthy device, and the run completes."""
+    env = wrap_env(make_env(FLEET, noise=0.0, seed=0,
+                            dispatch_factors=(float("inf"), 1, 1, 1)),
+                   parse_faults("deadline=4,retries=3,seed=0"))
+    disp = env.open_dispatch()
+    assert disp.deadline_s is not None and math.isfinite(disp.deadline_s)
+    space = make_space(FLEET)
+    for i in range(8):
+        disp.submit(space.values(i), i)
+    comps = _drain(disp)                         # would hang pre-deadline
+    assert sorted(c.ticket for c in comps) == list(range(8))
+    assert all(c.obs is not None for c in comps)
+    assert all(c.worker in (1, 2, 3) for c in comps)
+    assert disp.quarantined == {0}
+    timeouts = [f for f in disp.failed if f.reason == "timeout"]
+    assert timeouts and all(f.worker == 0 for f in timeouts)
+
+
+def test_retry_clears_transient_faults():
+    fails = []
+
+    def hook(ticket, worker, attempt, logical_round):
+        if attempt == 1:
+            fails.append(ticket)
+            return "flaky"
+        return None
+
+    env = make_env(FLEET, noise=0.0, seed=0)
+    disp = AsyncDispatcher(env, max_attempts=3, fault_hook=hook,
+                           backoff_s=lambda t, a: 0.1)
+    space = make_space(FLEET)
+    for i in range(4):
+        disp.submit(space.values(i), i)
+    comps = _drain(disp)
+    assert all(c.obs is not None and c.attempts == 2 for c in comps)
+    assert disp.retries == 4 and len(disp.failed) == 4
+    assert not disp.quarantined                  # flaky never quarantines
+    assert sorted(fails) == [0, 1, 2, 3]
+
+
+def test_exhausted_pull_delivers_censored_completion():
+    disp = AsyncDispatcher(make_env(FLEET, noise=0.0, seed=0),
+                           max_attempts=2,
+                           fault_hook=lambda *a: "flaky")
+    space = make_space(FLEET)
+    disp.submit(space.values(0), 0)
+    (comp,) = disp.pop_wave()
+    assert comp.obs is None and comp.fault == "flaky"
+    assert comp.attempts == 2
+    assert len(disp.failed) == 2                 # one per failed attempt
+
+
+def test_quarantine_exhaustion_and_no_healthy_worker():
+    disp = AsyncDispatcher(make_env(FLEET, noise=0.0, seed=0),
+                           max_attempts=3,
+                           fault_hook=lambda *a: "crash")
+    space = make_space(FLEET)
+    disp.submit(space.values(0), 0)              # quarantines 3 of 4
+    disp.submit(space.values(1), 1)              # quarantines the last
+    disp.submit(space.values(2), 2)              # nobody left to try
+    comps = sorted(_drain(disp), key=lambda c: c.ticket)
+    assert [c.fault for c in comps] == \
+        ["crash", "crash", "no-healthy-worker"]
+    assert comps[2].worker == -1 and comps[2].attempts == 0
+    assert disp.quarantined == {0, 1, 2, 3}
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), p=st.floats(0.0, 0.6, allow_nan=False))
+def test_dispatcher_chaos_conservation_property(seed, p):
+    """Under any flaky-fault rate: every ticket completes exactly once,
+    attempts stay within `max_attempts`, and the whole completion stream
+    is deterministic under a fixed plan seed."""
+    plan = FaultPlan(seed=seed, pull_fail=p, deadline_factor=8.0,
+                     max_attempts=3)
+    space = make_space(FLEET)
+
+    def run_once():
+        env = wrap_env(make_env(FLEET, noise=0.0, seed=0), plan)
+        disp = env.open_dispatch()
+        for i in range(12):
+            disp.submit(space.values(i % space.n_arms), i)
+        return disp, _drain(disp)
+
+    d1, c1 = run_once()
+    d2, c2 = run_once()
+    assert sorted(c.ticket for c in c1) == list(range(12))
+    assert all(1 <= c.attempts <= plan.max_attempts for c in c1)
+    key = lambda cs: [(c.ticket, c.worker, c.finished_at, c.attempts,
+                       c.fault) for c in cs]
+    assert key(c1) == key(c2)
+    assert d1.retries == d2.retries and len(d1.failed) == len(d2.failed)
+
+
+def test_fault_events_fan_out_into_metrics():
+    plan = FaultPlan(seed=0, pull_fail=0.9, max_attempts=3,
+                     deadline_factor=8.0)
+    space = make_space(FLEET)
+    with obs_mod.observing(None) as sess:
+        env = wrap_env(make_env(FLEET, noise=0.0, seed=0), plan)
+        disp = env.open_dispatch()
+        for i in range(8):
+            disp.submit(space.values(i), i)
+        _drain(disp)
+        flaky = FlakySensor(_ConstSensor(), FaultPlan(sensor_drop=1.0))
+        with pytest.raises(SensorUnavailable):
+            flaky.read_watts()
+    m = sess.metrics
+    injected = m.counter("faults_injected_total").value
+    assert injected >= 1 + len(disp.failed)      # hook hits + sensor drop
+    assert m.counter("retries_total").value == disp.retries > 0
+    assert m.counter("pull_faults_total").value == len(disp.failed) > 0
+
+
+# ---------------------------------------------------------------------------
+# Controller-level degradation
+# ---------------------------------------------------------------------------
+
+
+def _fleet_setup(seed, **kw):
+    env = make_env(FLEET, seed=seed, **kw)
+    space = make_space(FLEET)
+    cm = cost.CostModel(alpha=0.5)
+    e_ref, l_ref = env.expected(space.values(space.corner()))
+    cm = cm.with_reference(e_ref, l_ref)
+    opt_arm, opt_cost = controller.landscape_optimal(space, env.expected, cm)
+    _, mu0, sig0 = priors.jetson_camel_policy("llama3.2-1b", space)
+    return env, space, cm, opt_arm, opt_cost, mu0, sig0
+
+
+def test_armed_idle_plan_is_bit_identical_to_bare_fleet():
+    """A deadline-only plan activates the whole resilient path —
+    `FaultyFleet` wrap, resilient dispatcher, retry budget — yet no fault
+    ever fires, so an `AsyncController` run must reproduce the bare
+    fleet record for record (the E14 zero-fault claim at unit size)."""
+    kw = dict(noise=0.03)
+    env_b, space, cm, _, opt_cost, mu0, sig0 = _fleet_setup(3, **kw)
+    pol = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    bare = controller.AsyncController(
+        space, pol, cm, optimal_cost=opt_cost, seed=3, k=4).run(env_b, 6)
+
+    env_w, _, _, _, _, _, _ = _fleet_setup(3, **kw)
+    plan = parse_faults("deadline=1e9,retries=3")
+    assert not plan.is_zero
+    wrapped = wrap_env(env_w, plan)
+    assert isinstance(wrapped, FaultyFleet)
+    pol = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    armed = controller.AsyncController(
+        space, pol, cm, optimal_cost=opt_cost, seed=3, k=4).run(wrapped, 6)
+
+    assert not armed.failed_pulls
+    assert len(bare.records) == len(armed.records) == 24
+    for x, y in zip(armed.records, bare.records):
+        assert (x.t, x.arm, x.round, x.slot) == (y.t, y.arm, y.round, y.slot)
+        assert (x.energy, x.latency, x.cost, x.regret) == \
+            (y.energy, y.latency, y.cost, y.regret)
+        assert x.obs.metadata["device"] == y.obs.metadata["device"]
+    assert armed.best_arm == bare.best_arm
+    np.testing.assert_array_equal(armed.cum_regret, bare.cum_regret)
+
+
+def test_hung_device_controller_run_completes_without_device0():
+    """End-to-end through `AsyncController`: the hung device's pulls
+    re-dispatch under the deadline and the budget is served entirely by
+    the healthy devices — `pop_wave` never stalls the loop."""
+    env, space, cm, _, opt_cost, mu0, sig0 = _fleet_setup(
+        0, noise=0.0, dispatch_factors=(float("inf"), 1, 1, 1))
+    wrapped = wrap_env(env, parse_faults("deadline=4,retries=3,seed=0"))
+    pol = baselines.make_policy("camel", prior_mu=mu0, prior_sigma=sig0)
+    res = controller.AsyncController(
+        space, pol, cm, optimal_cost=opt_cost, seed=0, k=4).run(wrapped, 6)
+    assert len(res.records) + len(res.failed_pulls) == 24
+    assert res.records                           # chaos did not censor all
+    assert all(r.obs.metadata["device"] != 0 for r in res.records)
+
+
+def test_update_censored_never_sharpens_posterior():
+    state = bandit.init_state(5, prior_mu=1.0, prior_sigma=0.4)
+    # an arm with no history stays exactly at its prior
+    out = bandit.update_censored(state, 2, 0.0)
+    assert float(np.asarray(out.mu)[2]) == pytest.approx(1.0)
+    assert float(np.asarray(out.sigma2)[2]) == pytest.approx(0.4)
+    assert float(np.asarray(out.stale_n)[2]) == 1.0
+    np.testing.assert_array_equal(np.asarray(out.count),
+                                  np.asarray(state.count))
+    np.testing.assert_array_equal(np.asarray(out.sum_x),
+                                  np.asarray(state.sum_x))
+    # arms the failure did not touch are untouched
+    for f in ("mu", "sigma2", "stale_n"):
+        a = np.asarray(getattr(out, f))
+        b = np.asarray(getattr(state, f))
+        np.testing.assert_array_equal(np.delete(a, 2), np.delete(b, 2),
+                                      err_msg=f)
+    # on an arm with history: repeated censoring widens monotonically and
+    # pulls the mean toward the prior, never past it
+    for c in (0.6, 0.55, 0.65):
+        state = bandit.update(state, 3, c)
+    mu_fresh = float(np.asarray(state.mu)[3])
+    prev_sig = float(np.asarray(state.sigma2)[3])
+    prev_mu = mu_fresh
+    s = state
+    for staleness in (0.0, 1.0, 4.0):
+        s = bandit.update_censored(s, 3, staleness)
+        sig = float(np.asarray(s.sigma2)[3])
+        mu = float(np.asarray(s.mu)[3])
+        assert sig > prev_sig
+        lo, hi = min(mu_fresh, 1.0), max(mu_fresh, 1.0)
+        assert lo - 1e-6 <= mu <= hi + 1e-6
+        assert abs(mu - 1.0) <= abs(prev_mu - 1.0) + 1e-6
+        prev_sig, prev_mu = sig, mu
+        # the empirical history never moves on censored evidence
+        np.testing.assert_array_equal(np.asarray(s.count),
+                                      np.asarray(state.count))
+        np.testing.assert_array_equal(np.asarray(s.sum_x),
+                                      np.asarray(state.sum_x))

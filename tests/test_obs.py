@@ -236,6 +236,169 @@ def test_energy_meter_background_thread_samples():
 
 
 # ---------------------------------------------------------------------------
+# EnergyMeter fault tolerance (ISSUE satellite: the sampler thread no
+# longer dies on a raising sensor)
+# ---------------------------------------------------------------------------
+
+
+class _FaultySensor:
+    """Reads a constant, but fails (raise or NaN) on scripted indices."""
+
+    name = "faulty"
+
+    def __init__(self, watts=9.0, raise_at=(), nan_at=()):
+        self.watts = watts
+        self.raise_at = set(raise_at)
+        self.nan_at = set(nan_at)
+        self.i = -1
+
+    def read_watts(self):
+        self.i += 1
+        if self.i in self.raise_at:
+            raise obs.SensorUnavailable(f"scripted failure at {self.i}")
+        if self.i in self.nan_at:
+            return float("nan")
+        return self.watts
+
+    def close(self):
+        pass
+
+
+def test_energy_meter_counts_errors_and_keeps_sampling():
+    """A raising read and a NaN read are each dropped and counted in
+    `sample_errors`; the samples around them still integrate exactly."""
+    bench = _Bench(None)
+    sensor = _FaultySensor(watts=9.0, raise_at={1}, nan_at={3})
+    m = obs.EnergyMeter(sensor, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        for t in (1.0, 2.0, 3.0):            # reads 1 (raises), 2, 3 (NaN)
+            bench.t = t
+            meas.sample()
+        bench.t = 4.0                        # exit read: index 4, clean
+    assert meas.sample_errors == 2
+    assert meas.n_samples == 3               # entry + read 2 + exit
+    assert meas.avg_watts == 9.0             # constant-signal exactness
+    assert meas.joules == 9.0 * 4.0
+    assert meas.summary()["sample_errors"] == 2
+
+
+def test_energy_meter_background_thread_survives_raising_sensor():
+    """The regression the ISSUE names: `read_watts()` raising inside the
+    background sampler used to kill the thread, silently truncating the
+    measurement.  Now every other read raising still yields a full
+    measurement with the errors counted."""
+    sensor = _FaultySensor(watts=5.0,
+                           raise_at=set(range(1, 10_000, 2)))
+    m = obs.EnergyMeter(sensor, hz=500.0)
+    import time as _time
+    with m.measure() as meas:
+        _time.sleep(0.05)
+    # the thread kept sampling past the failures: successes AND errors
+    # both kept accumulating until exit
+    assert meas.sample_errors >= 2
+    assert meas.n_samples >= 2
+    assert meas.avg_watts == 5.0
+    assert meas.summary()["sample_errors"] == meas.sample_errors
+
+
+def test_energy_meter_all_samples_failed_finalizes_to_zeros():
+    bench = _Bench(None)
+    sensor = _FaultySensor(raise_at=set(range(100)))
+    m = obs.EnergyMeter(sensor, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        bench.t = 1.0
+        meas.sample()
+    assert meas.n_samples == 0 and meas.sample_errors == 3
+    s = meas.summary()
+    assert s["joules"] == 0.0 and s["duration_s"] == 0.0
+    assert s["sample_errors"] == 3           # the zeros tell the story
+
+
+# ---------------------------------------------------------------------------
+# Degradation: replay exhaustion + fallback chains (ISSUE satellites)
+# ---------------------------------------------------------------------------
+
+
+def _rows(sink):
+    return [json.loads(line) for line in sink.getvalue().splitlines()]
+
+
+def test_replay_sensor_exhaustion_holds_and_warns_once():
+    src = io.StringIO('{"t": 0, "watts": 3.0}\n{"t": 1, "watts": 7.0}\n')
+    sink = io.StringIO()
+    with obs.observing(sink) as sess:
+        s = obs.ReplaySensor(src, loop=False)
+        assert [s.read_watts() for _ in range(6)] == [3, 7, 7, 7, 7, 7]
+        assert s.exhausted
+        assert sess.metrics.counter("sensor_faults_total").value == 1
+    events = [r for r in _rows(sink) if r["name"] == "fault.sensor"]
+    assert len(events) == 1                  # warned once, not per read
+    assert events[0]["attrs"]["reason"] == "trace-exhausted"
+    assert events[0]["attrs"]["held_watts"] == 7.0
+
+
+def test_fallback_sensor_degrades_mid_run():
+    first = _FaultySensor(watts=10.0, raise_at={2})
+    second = _SeqSensor([20.0])
+    sink = io.StringIO()
+    with obs.observing(sink):
+        chain = obs.FallbackSensor([first, second])
+        assert chain.name == "fallback:faulty"
+        assert [chain.read_watts() for _ in range(2)] == [10.0, 10.0]
+        # read 2 raises -> permanent degradation to the next sensor,
+        # which serves the SAME read (the caller never sees the failure)
+        assert chain.read_watts() == 20.0
+        assert chain.degradations == 1
+        assert chain.name == "fallback:seq"
+        assert chain.read_watts() == 20.0    # no flap-back
+    events = [r for r in _rows(sink) if r["name"] == "fault.sensor"]
+    assert len(events) == 1
+    assert events[0]["attrs"]["degraded_to"] == "seq"
+    # a NaN is NOT a chain failure (the meter counts it instead)
+    nan_chain = obs.FallbackSensor([_FaultySensor(nan_at={0}),
+                                    _SeqSensor([1.0])])
+    import math as _math
+    assert _math.isnan(nan_chain.read_watts())
+    assert nan_chain.degradations == 0
+
+
+def test_fallback_sensor_exhausted_chain_raises():
+    chain = obs.FallbackSensor([_FaultySensor(raise_at={0}),
+                                _FaultySensor(raise_at={0})])
+    with pytest.raises(obs.SensorUnavailable, match="chain exhausted"):
+        chain.read_watts()
+    with pytest.raises(obs.SensorUnavailable):
+        obs.FallbackSensor([])
+
+
+def test_fallback_from_specs_skips_dead_constructors(monkeypatch,
+                                                     tmp_path):
+    monkeypatch.setitem(sys.modules, "pynvml", None)
+    plat = DVFSPlatform(energy.JETSON_AGX_ORIN)
+    sink = io.StringIO()
+    with obs.observing(sink):
+        s = obs.make_sensor(
+            f"fallback:nvml,replay:{tmp_path / 'missing.jsonl'},simulated",
+            platform=plat)
+    assert isinstance(s, obs.FallbackSensor)
+    assert s.name.startswith("fallback:simulated:")
+    assert s.read_watts() > 0.0
+    skipped = [r for r in _rows(sink) if r["name"] == "fault.sensor"]
+    assert len(skipped) == 2                 # nvml + missing trace
+    assert all(r["attrs"]["phase"] == "construct" for r in skipped)
+    with pytest.raises(obs.SensorUnavailable, match="no sensor in the"):
+        obs.make_sensor("fallback:nvml,sysfs")
+    # metering a degrading chain surfaces the exhaustion as sample
+    # errors, never a dead thread
+    dead = obs.FallbackSensor([_FaultySensor(raise_at=set(range(100)))])
+    bench = _Bench(None)
+    m = obs.EnergyMeter(dead, clock=bench.clock, background=False)
+    with m.measure() as meas:
+        bench.t = 1.0
+    assert meas.sample_errors == 2 and meas.n_samples == 0
+
+
+# ---------------------------------------------------------------------------
 # Engine bit-identity: sensor=None vs sensor="simulated"
 # ---------------------------------------------------------------------------
 

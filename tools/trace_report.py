@@ -7,6 +7,9 @@ and renders:
   mean power, mean staleness (async runs), with the committed arm marked;
 * the per-request summary (continuous-batching runs): request count,
   queue wait / latency / tokens from ``engine.request`` spans;
+* the fault summary (chaos runs, ``--faults``): injected faults,
+  retries/backoff, quarantined workers, sensor degradations, cancelled
+  requests — from the ``fault.*`` seams;
 * span totals by name (where the run's wall-clock went);
 * the closing metrics snapshot (counters / gauges / histograms);
 * the run-level sensor measurement, when a non-simulated sensor ran.
@@ -145,6 +148,38 @@ def request_table(rows: List[dict], max_rows: int = 32) -> List[str]:
     return lines
 
 
+def fault_table(rows: List[dict]) -> List[str]:
+    """Fault summary from the `fault.*` seams (repro.faults): what was
+    injected, what the stack did about it (retries, quarantines,
+    sensor degradations, cancelled requests)."""
+    faults = [r for r in rows if str(r.get("name", "")).startswith("fault.")]
+    if not faults:
+        return []
+    by_key: Dict[str, int] = defaultdict(int)
+    for r in faults:
+        a = r.get("attrs", {})
+        detail = (a.get("fault") or a.get("reason") or a.get("action")
+                  or "-")
+        by_key[f"{r.get('name')} {detail}"] += 1
+    lines = ["", f"fault summary ({len(faults)} fault events):",
+             f"{'event':<44}{'count':>6}"]
+    for key in sorted(by_key):
+        lines.append(f"{key:<44}{by_key[key]:>6}")
+    backoffs = [r["attrs"]["backoff_s"] for r in faults
+                if r.get("name") == "fault.retry"
+                and r.get("attrs", {}).get("backoff_s") is not None]
+    if backoffs:
+        lines.append(f"retries: {len(backoffs)}, mean backoff "
+                     f"{_fmt(_mean(backoffs), 1).strip()} s")
+    quarantined = sorted({w for r in faults
+                          if r.get("name") == "fault.device"
+                          for w in [r.get("attrs", {}).get("worker")]
+                          if w is not None})
+    if quarantined:
+        lines.append(f"quarantined workers: {quarantined}")
+    return lines
+
+
 def span_table(rows: List[dict]) -> List[str]:
     spans = [r for r in rows if r.get("kind") == "span"]
     if not spans:
@@ -240,6 +275,7 @@ def report(path: str, analysis: Optional[str] = None) -> str:
     lines = [f"== {path}: {len(rows)} rows ({head})", ""]
     lines += arm_table(rows)
     lines += request_table(rows)
+    lines += fault_table(rows)
     lines += span_table(rows)
     lines += sensor_lines(rows)
     lines += metric_table(rows)
